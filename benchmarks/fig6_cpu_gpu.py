@@ -1,0 +1,37 @@
+"""Fig. 6 reproduction: attention-score energy vs CPU / GPU on ViT and
+DETR workloads (the paper's methodology: behavioural op counts × per-op
+energy benchmark)."""
+from __future__ import annotations
+
+from repro.core import energy
+
+# Workload geometry: attention-score computation per image.
+#   ViT-Base: 12 layers x 12 heads, N=197 tokens, head_dim=64
+#   DETR: encoder 6 layers x 8 heads N=950 (~76x76/8^2 features + pads),
+#         decoder cross 100 queries (dominated by encoder self-attn).
+WORKLOADS = {
+    "ViT-Base image recognition": dict(layers=12, heads=12, n=197, d=64,
+                                       cpu=energy.CPU_J_PER_OP,
+                                       gpu=energy.GPU_J_PER_OP,
+                                       claim=(25.2, 12.9)),
+    "DETR visual segmentation": dict(layers=6, heads=8, n=950, d=64,
+                                     cpu=energy.CPU_J_PER_OP_DETR,
+                                     gpu=energy.GPU_J_PER_OP_DETR,
+                                     claim=(26.8, 13.3)),
+}
+
+
+def run(report):
+    report.section("Fig. 6 — attention-score energy vs CPU/GPU")
+    for name, w in WORKLOADS.items():
+        ops = w["layers"] * energy.score_ops(w["n"], w["d"],
+                                             heads=w["heads"])
+        e_macro = energy.macro_energy_j(ops)
+        e_cpu = ops * w["cpu"]
+        e_gpu = ops * w["gpu"]
+        cpu_x, gpu_x = e_cpu / e_macro, e_gpu / e_macro
+        report.row(f"{name:30s} ops={ops:.3e}  macro={e_macro*1e6:8.2f} uJ"
+                   f"  CPU {cpu_x:5.1f}x  GPU {gpu_x:5.1f}x"
+                   f"  (paper: {w['claim'][0]}x / {w['claim'][1]}x)")
+        report.check(f"{name}: CPU ratio", abs(cpu_x - w["claim"][0]) < 0.5)
+        report.check(f"{name}: GPU ratio", abs(gpu_x - w["claim"][1]) < 0.5)

@@ -1,0 +1,64 @@
+"""Roofline reporter: aggregates results/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (single-pod baselines per assignment)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+HBM_GB = 16.0          # v5e-class chip
+
+
+def load(mesh="single"):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*_{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def fmt_row(rec):
+    r = rec["roofline"]
+    live = rec["live_bytes_per_device"] / 2 ** 30
+    fit = "OK" if live <= HBM_GB else f"OVER({live:.0f}G)"
+    frac = (r["compute_s"] / r["bound_s"]) if r["bound_s"] else 0.0
+    return (f"{rec['arch']:22s} {rec['shape']:12s} "
+            f"{r['compute_s']*1e3:9.1f} {r['memory_s']*1e3:9.1f} "
+            f"{r['collective_s']*1e3:10.1f}  {r['dominant']:10s} "
+            f"{(r['useful_ratio'] or 0):5.2f} {frac:5.2f}  {fit}")
+
+
+def run(report):
+    report.section("Roofline (single-pod 16x16, per-chip terms, ms)")
+    report.row(f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+               f"{'collective':>10s}  {'dominant':10s} {'useful':>5s} "
+               f"{'roof%':>5s}  fit")
+    recs = load("single")
+    if not recs:
+        report.row("(no dry-run artifacts found — run "
+                    "`python -m repro.launch.dryrun` first)")
+        return
+    for (arch, shape), rec in sorted(recs.items()):
+        report.row(fmt_row(rec))
+    n_fit = sum(1 for r in recs.values()
+                if r["live_bytes_per_device"] / 2 ** 30 <= HBM_GB)
+    report.row(f"-- {len(recs)} cells; {n_fit} fit {HBM_GB:.0f} GB HBM; "
+               f"multi-pod artifacts: {len(load('multi'))}")
+    report.check("all single-pod cells compiled", len(recs) >= 34)
+    report.check("all multi-pod cells compiled", len(load("multi")) >= 34)
+
+
+if __name__ == "__main__":
+    class _R:
+        def section(self, s):
+            print(f"\n== {s} ==")
+
+        def row(self, s):
+            print(s)
+
+        def check(self, name, ok):
+            print(f"[{'PASS' if ok else 'FAIL'}] {name}")
+
+    run(_R())

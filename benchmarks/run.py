@@ -1,0 +1,39 @@
+"""Benchmark aggregator: `PYTHONPATH=src python -m benchmarks.run`.
+
+One module per paper table/figure + the framework-side roofline report.
+Exit code 1 if any reproduction check fails.
+"""
+from __future__ import annotations
+
+import sys
+
+
+class Report:
+    def __init__(self):
+        self.checks = []
+
+    def section(self, s):
+        print(f"\n== {s} ==")
+
+    def row(self, s):
+        print(f"   {s}")
+
+    def check(self, name, ok):
+        self.checks.append((name, bool(ok)))
+        print(f"   [{'PASS' if ok else 'FAIL'}] {name}")
+
+
+def main():
+    from benchmarks import (fig6_cpu_gpu, fig7_memory, roofline,
+                            table1_macro, wqk_vs_standard, zeroskip_bench)
+    report = Report()
+    for mod in (table1_macro, fig6_cpu_gpu, fig7_memory, zeroskip_bench,
+                wqk_vs_standard, roofline):
+        mod.run(report)
+    n_fail = sum(1 for _, ok in report.checks if not ok)
+    print(f"\n{'='*60}\n{len(report.checks)} checks, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

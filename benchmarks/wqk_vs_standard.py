@@ -1,0 +1,42 @@
+"""Paper-technique systems benchmark on the FRAMEWORK side: W_QK fold vs
+standard scores — FLOPs, decode-cache bytes, and CIM-model energy across
+the assigned archs (the 'does the paper's idea transfer' table)."""
+from __future__ import annotations
+
+from repro.configs.base import get_arch, list_archs
+from repro.core import energy
+from repro.serving import kvcache
+
+
+def run(report):
+    report.section("W_QK fold vs standard per arch (decode economics)")
+    report.row(f"{'arch':22s} {'D':>6s} {'2*Hkv*dh':>8s} "
+               f"{'x-cache/kv-cache':>16s} {'fold wins?':>10s} "
+               f"{'score-exact?':>12s}")
+    for name in list_archs():
+        cfg = get_arch(name)
+        if not cfg.num_heads:
+            report.row(f"{name:22s} {'—':>6s} {'—':>8s} {'—':>16s} "
+                       f"{'n/a (attention-free)':>10s}")
+            continue
+        modes = kvcache.compare_modes(cfg)
+        ratio = modes["x"] / modes["kv"]
+        wins = ratio < 1.0
+        exact = cfg.pos_emb in ("absolute", "none")
+        report.row(f"{name:22s} {cfg.d_model:6d} "
+                   f"{2*cfg.num_kv_heads*cfg.head_dim:8d} "
+                   f"{ratio:16.2f} {str(wins):>10s} {str(exact):>12s}")
+    report.check("whisper-tiny: fold wins on memory AND is exact",
+                 kvcache.compare_modes(get_arch('whisper-tiny'))["x"]
+                 < kvcache.compare_modes(get_arch('whisper-tiny'))["kv"])
+
+    report.section("Score FLOPs: explicit W_QK vs factored (N=4096)")
+    for name in ("whisper-tiny", "qwen2.5-14b"):
+        cfg = get_arch(name)
+        n = 4096
+        exp = energy.score_ops(n, cfg.d_model, cfg.num_heads)
+        fac = energy.standard_score_ops(n, cfg.d_model, cfg.head_dim,
+                                        cfg.num_heads)
+        report.row(f"{name:22s} explicit={exp:.3e} factored={fac:.3e} "
+                   f"ratio={exp/fac:5.1f}x "
+                   f"({'explicit ok' if exp/fac < 4 else 'use factored'})")

@@ -1,0 +1,55 @@
+"""§III.C reproduction: zero-value bit-skipping saves >=55% on practical
+Transformer inputs (padding + short sequences + low-frequency tokens)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import zeroskip
+from repro.data import pipeline
+
+
+def _activation_like(rng, n, d, pad_frac):
+    """int8 activations with transformer-like statistics: Laplacian body
+    (small magnitudes - few high bits set) + zero padding."""
+    x = rng.laplace(0, 12, (n, d)).clip(-127, 127).astype(np.int8)
+    n_pad = int(n * pad_frac)
+    if n_pad:
+        x[-n_pad:] = 0
+    return x
+
+
+def run(report):
+    report.section("Zero-skip (paper §III.C: >=55% cycle/energy saving)")
+    rng = np.random.default_rng(0)
+    rows = [("uniform dense (worst case)",
+             rng.integers(-128, 128, (64, 64)).astype(np.int8)),
+            ("activation-like, no padding",
+             _activation_like(rng, 64, 64, 0.0)),
+            ("activation-like, 25% padded",
+             _activation_like(rng, 64, 64, 0.25)),
+            ("activation-like, 50% padded",
+             _activation_like(rng, 64, 64, 0.50))]
+    for name, x in rows:
+        st = zeroskip.skip_stats(jnp.asarray(x), jnp.asarray(x))
+        report.row(f"{name:32s} skip={float(st.skip_fraction)*100:5.1f}%  "
+                   f"bit-density={float(st.bit_density_a):.3f}")
+    practical = zeroskip.skip_stats(
+        jnp.asarray(_activation_like(rng, 64, 64, 0.25)),
+        jnp.asarray(_activation_like(rng, 64, 64, 0.25)))
+    report.check(">=55% skip on practical inputs",
+                 float(practical.skip_fraction) >= 0.55)
+
+    # token-level analogue from the data pipeline (the TPU-side mechanism)
+    dc = pipeline.DataConfig(vocab_size=50000, seq_len=512, global_batch=16,
+                             pack=False, mean_doc_len=160)
+    b = pipeline.make_batch(dc, 0)
+    pf = pipeline.pad_fraction(b)
+    dc2 = pipeline.DataConfig(vocab_size=50000, seq_len=512,
+                              global_batch=16, pack=True)
+    b2 = pipeline.make_batch(dc2, 0)
+    report.row(f"pipeline pad fraction: unpacked={pf*100:.1f}% -> "
+               f"packed={pipeline.pad_fraction(b2)*100:.1f}% "
+               f"(sequence packing = token-level zero-skip)")
+    report.check("packing removes padding",
+                 pipeline.pad_fraction(b2) < 0.02 < pf)

@@ -1,0 +1,268 @@
+"""Config system: dataclasses for model architecture, input shapes, parallelism.
+
+Every assigned architecture is a ``ModelConfig`` registered in ``ARCHS``;
+every input-shape cell is a ``ShapeConfig`` in ``SHAPES``. The dry-run,
+trainer, server and benchmarks all consume these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# Score modes: the paper's technique as a first-class feature.
+#   standard  - S = (X W_Q)(X W_K)^T                      (baseline)
+#   wqk       - S = X W_QK X^T, W_QK = W_Q W_K^T folded   (paper, float)
+#   wqk_int8  - W8A8 integer scores via folded W_QK       (paper, TPU-native
+#               adaptation of the bit-serial multiplier-free MAC)
+# RoPE archs use the 2-term decomposed fold (DESIGN.md S4) when wqk* is on.
+SCORE_MODES = ("standard", "wqk", "wqk_int8")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_ff: int                   # per-expert intermediate size
+    every_n_layers: int = 1          # MoE FFN on layers where (idx % n)==n-1
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128             # N (ssm_state)
+    head_dim: int = 64               # P
+    expand: int = 2                  # d_inner = expand * d_model
+    chunk: int = 256                 # SSD chunk length
+    conv_width: int = 4
+    # shard SSD heads over the model axis: essential for TRAIN backward
+    # (the (B,H,C,Q,Q) intra-chunk tensor is ~17 GB/layer at jamba scale)
+    # but pure reshard overhead for inference graphs — the dry-run turns
+    # it off for prefill/decode cells (EXPERIMENTS.md §Perf hillclimb B)
+    shard_heads: bool = True
+    # derived: num_heads = d_inner // head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                   # query heads (0 for attn-free)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    pos_emb: str = "rope"            # rope | absolute | none
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "swiglu"              # swiglu | gelu
+    tie_embeddings: bool = False
+    # attention pattern
+    sliding_window: Optional[int] = None      # SWA for all attn layers
+    local_global_ratio: Optional[int] = None  # gemma3: N local per 1 global
+    local_window: int = 1024
+    # hybrid (jamba): 1 attention layer per `attn_every` layers, rest SSM
+    attn_every: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # enc-dec (whisper)
+    enc_dec: bool = False
+    num_enc_layers: int = 0
+    # modality frontend stub: inputs are precomputed embeddings of this dim
+    frontend: Optional[str] = None   # None | audio | vision
+    # --- paper technique ---
+    score_mode: str = "standard"
+    wqk_explicit: bool = True        # explicit DxD W_QK (paper) vs factored
+    # decode-cache mode override: None = auto (kv for standard scores;
+    # pure-x when D < 2*Hkv*dh else xv). 'x' trades V-recompute flops for
+    # halved cache; crossover measured in EXPERIMENTS.md §Perf (C).
+    cache_mode: Optional[str] = None  # None | kv | xv | x
+    # int8 X-cache (beyond-paper, paper-aligned): the macro streams 8-bit
+    # inputs, so store the raw-X cache in exactly that format — int8 with
+    # per-token scales. Halves X-cache HBM again; for wqk_int8 scores the
+    # quantization is the SAME one the score path applies, so accuracy
+    # cost is ~zero. Applies to wqk*/x-carrying cache modes only.
+    cache_quant: Optional[str] = None  # None | int8
+    # --- numerics / training ---
+    dtype: str = "bfloat16"
+    remat: str = "block"             # none | block | full
+    logit_softcap: Optional[float] = None
+    # blockwise online-softmax attention (flash schedule with custom-VJP
+    # backward) for KV lengths >= this; shorter sequences keep the
+    # quadratic path (cheaper at small N, and the exactness oracle)
+    blockwise_min_len: int = 4096
+    attn_block_m: int = 1024
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def attn_layer_indices(self) -> tuple:
+        """Which layer indices carry attention (hybrid archs)."""
+        if self.attn_every:
+            return tuple(i for i in range(self.num_layers)
+                         if i % self.attn_every == 0)
+        if self.family == "ssm":
+            return ()
+        return tuple(range(self.num_layers))
+
+    def is_global_attn(self, idx: int) -> bool:
+        """gemma3-style local:global interleave; global every (ratio+1)th."""
+        if self.local_global_ratio is None:
+            return True
+        return (idx + 1) % (self.local_global_ratio + 1) == 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + stacks), for roofline 6ND."""
+        d, L = self.d_model, self.num_layers
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        n_attn = len(self.attn_layer_indices) if (self.attn_every or self.family == "ssm") else L
+        if self.family == "ssm":
+            n_attn = 0
+        # attention params
+        qkv = d * self.num_heads * self.head_dim + 2 * d * self.num_kv_heads * self.head_dim
+        o = self.num_heads * self.head_dim * d
+        total += n_attn * (qkv + o)
+        # ssm params
+        if self.ssm is not None:
+            di = self.ssm.expand * d
+            nh = di // self.ssm.head_dim
+            # B and C are per-group (n_groups=1), not per-head, in SSD
+            in_proj = d * (2 * di + 2 * self.ssm.state_dim + nh)
+            out_proj = di * d
+            n_ssm = L - n_attn
+            total += n_ssm * (in_proj + out_proj + di * self.ssm.conv_width)
+        # ffn params
+        ff_mult = 3 if self.act == "swiglu" else 2
+        if self.moe is not None:
+            n_moe = L // self.moe.every_n_layers
+            n_dense = L - n_moe
+            total += n_moe * (self.moe.num_experts * ff_mult * d * self.moe.expert_ff
+                              + d * self.moe.num_experts)
+            total += n_dense * ff_mult * d * self.d_ff if self.d_ff else 0
+        elif self.d_ff:
+            total += L * ff_mult * d * self.d_ff
+        if self.enc_dec:
+            # encoder stack + cross-attn in decoder
+            total += self.num_enc_layers * (qkv + o + ff_mult * d * self.d_ff)
+            total += L * (qkv + o)  # cross attention
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE top-k instead of all experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        full = self.param_count()
+        n_moe = L // self.moe.every_n_layers
+        ff_mult = 3 if self.act == "swiglu" else 2
+        all_e = n_moe * self.moe.num_experts * ff_mult * d * self.moe.expert_ff
+        act_e = n_moe * self.moe.top_k * ff_mult * d * self.moe.expert_ff
+        return full - all_e + act_e
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+# Archs for which long_500k is skipped (pure full-attention; see DESIGN.md).
+LONG_CONTEXT_OK = {"mamba2-2.7b", "jamba-1.5-large-398b", "gemma3-27b",
+                   "mixtral-8x22b"}
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def cells(arch: Optional[str] = None):
+    """All valid (arch, shape) dry-run cells per the assignment rules."""
+    _ensure_loaded()
+    out = []
+    for name in sorted(_REGISTRY):
+        if arch and name != arch:
+            continue
+        for sname, shp in SHAPES.items():
+            if sname == "long_500k" and name not in LONG_CONTEXT_OK:
+                continue
+            out.append((name, sname))
+    return out
+
+
+def _ensure_loaded():
+    # import the per-arch modules exactly once
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        qwen2_5_14b, qwen2_72b, gemma3_27b, internlm2_20b, whisper_tiny,
+        pixtral_12b, mixtral_8x22b, qwen3_moe_235b_a22b,
+        jamba_1_5_large_398b, mamba2_2_7b)
+
+
+def reduced(cfg: ModelConfig, **over) -> ModelConfig:
+    """Smoke-test-sized config of the same family (tiny dims, same pattern)."""
+    ch = dict(
+        num_layers=min(cfg.num_layers, 4),
+        d_model=128,
+        num_heads=4 if cfg.num_heads else 0,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_heads else 0,
+        head_dim=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        remat="none",
+    )
+    if cfg.moe is not None:
+        # capacity_factor=4: smoke tests check decode==full-forward
+        # consistency, which capacity DROPS legitimately break (routing
+        # is batch-dependent); production cf=1.25 is exercised by the
+        # dry-run cells and the dropped_frac metric
+        ch["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2), expert_ff=128,
+            capacity_factor=4.0)
+    if cfg.ssm is not None:
+        ch["ssm"] = dataclasses.replace(
+            cfg.ssm, state_dim=16, head_dim=32, chunk=32)
+    if cfg.attn_every is not None:
+        ch["attn_every"] = min(cfg.attn_every, 4)
+        ch["num_layers"] = 8
+    if cfg.local_global_ratio is not None:
+        ch["num_layers"] = 6
+        ch["local_window"] = 32
+    if cfg.enc_dec:
+        ch["num_enc_layers"] = 2
+    if cfg.sliding_window:
+        ch["sliding_window"] = 32
+    ch.update(over)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **ch)

@@ -1,0 +1,25 @@
+"""gemma3-27b [dense] — 5:1 local:global interleave, 128k context.
+[hf:google/gemma-3-1b-pt; unverified]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    act="swiglu",          # gemma uses geglu; swiglu-family gated MLP
+    local_global_ratio=5,  # 5 local layers per 1 global
+    local_window=1024,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    logit_softcap=None,    # gemma3 dropped attn softcap, uses qk-norm
+    # int8 KV cache (W8A8 storage): halves the 62-layer full-length cache
+    # at decode_32k, 28.5 -> ~14.6 GiB/dev (fits 16 GB HBM) with greedy
+    # decode identical to bf16 (EXPERIMENTS §Perf H15)
+    cache_quant="int8",
+))

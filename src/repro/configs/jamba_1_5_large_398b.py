@@ -1,0 +1,23 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attn 1:7 interleave, MoE 16e top-2.
+[arXiv:2403.19887; hf]
+
+Layer pattern: attention at layer indices i % 8 == 0 (1 attn : 7 mamba);
+MoE FFN every 2nd layer (every_n_layers=2), dense FFN otherwise.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    pos_emb="none",          # jamba uses no positional encoding
+    attn_every=8,
+    moe=MoEConfig(num_experts=16, top_k=2, expert_ff=24576, every_n_layers=2),
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk=256),
+))

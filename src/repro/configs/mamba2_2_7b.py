@@ -1,0 +1,20 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060; unverified]
+
+The paper's attention-score technique is INAPPLICABLE here (no Q.K^T);
+implemented without it — see DESIGN.md §Arch-applicability.
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,             # attention-free
+    num_kv_heads=0,
+    d_ff=0,                  # mamba block subsumes the FFN
+    vocab_size=50280,
+    pos_emb="none",
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk=256),
+))

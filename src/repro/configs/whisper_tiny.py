@@ -1,0 +1,32 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend (stub).
+[arXiv:2212.04356; unverified]
+
+Absolute positional embeddings => the paper's plain W_QK fold is EXACT here
+(DESIGN.md §4); D=384 < 2*kv*d = 768 so the X-cache also wins on memory.
+score_mode defaults to the paper technique for this arch.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    enc_dec=True,
+    num_enc_layers=4,
+    num_layers=4,            # decoder layers
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    pos_emb="absolute",
+    norm="layernorm",
+    act="gelu",
+    frontend="audio",        # stub: precomputed log-mel frame embeddings
+    score_mode="wqk_int8",   # paper technique on its home turf
+    # xv: X-cache scores (weight-stationary, the paper) + V-cache.
+    # Pure-x halves the cache but recomputes V from the whole cache per
+    # token — measured 19x decode FLOPs at 32k context (EXPERIMENTS §Perf
+    # hillclimb C). Pure-x remains right at short (paper-scale) contexts.
+    cache_mode="xv",
+))

@@ -1,0 +1,97 @@
+"""Bit-serial 4-group decomposition of the bilinear score form (Eq. 7-10).
+
+The CIM macro represents each K-bit two's-complement input scalar as
+
+    x = -2^{K-1} x(K-1) + sum_{k=0}^{K-2} 2^k x(k)              (Eq. 8/9)
+
+and expands the bilinear form s_ij = X_i W_QK X_j^T into FOUR groups
+(Eq. 10), each a sum over pairs of *bit-planes*:
+
+    s_ij =   2^{2K-2}                 * M(K-1, K-1)
+           - sum_{j*<K-1} 2^{K-1+j*}  * M(K-1, j*)
+           - sum_{i*<K-1} 2^{K-1+i*}  * M(i*,  K-1)
+           + sum_{i*,j*<K-1} 2^{i*+j*}* M(i*,  j*)
+
+    with  M(a, b) = sum_{i',j'} x_ii'(a) x_jj'(b) w_QK,i'j'     (Eq. 11)
+
+Each M is a bit-plane bilinear MAC: a 1b x 1b AND gates whether the 8-bit
+weight w enters the accumulation — *no multipliers*, only adds. In the
+macro the AND drives the word line; here the same arithmetic is expressed
+with 0/1 planes so the Pallas kernel (kernels/bitplane_mac) and this
+reference produce bit-exact int32 results equal to the direct integer
+bilinear form.
+
+This module is the pure-jnp oracle; it also exposes the plane
+decomposition used by the zero-skip statistics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def to_bitplanes(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Two's-complement bit-planes. x int (..., D) -> uint8 (..., D, bits),
+    plane k = bit k, plane bits-1 = sign bit."""
+    x = x.astype(jnp.int32)
+    u = jnp.where(x < 0, x + (1 << bits), x).astype(jnp.uint32)  # 2's compl.
+    shifts = jnp.arange(bits, dtype=jnp.uint32)
+    return ((u[..., None] >> shifts) & 1).astype(jnp.uint8)
+
+
+def from_bitplanes(planes: jax.Array, bits: int = 8) -> jax.Array:
+    """Inverse of to_bitplanes (signed reconstruction, Eq. 8)."""
+    weights = 2 ** jnp.arange(bits, dtype=jnp.int32)
+    weights = weights.at[bits - 1].set(-(2 ** (bits - 1)))
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=-1)
+
+
+def plane_mac(xa_plane: jax.Array, xb_plane: jax.Array,
+              w: jax.Array) -> jax.Array:
+    """M(a,b): bit-plane bilinear MAC (Eq. 11).
+
+    xa_plane (..., Na, D) 0/1; xb_plane (..., Nb, D) 0/1; w (D, D) int.
+    The AND of the two bits gates w — implemented as 0/1 matmuls, which is
+    arithmetically identical to gated accumulation.
+    """
+    g = jnp.einsum("...nd,de->...ne", xa_plane.astype(jnp.int32),
+                   w.astype(jnp.int32))
+    return jnp.einsum("...ne,...me->...nm", g, xb_plane.astype(jnp.int32))
+
+
+def bitserial_scores(xa: jax.Array, xb: jax.Array, w: jax.Array,
+                     bits: int = 8) -> jax.Array:
+    """Full Eq. 10: 4-group bit-serial bilinear scores, int32.
+
+    xa (..., Na, D) int8, xb (..., Nb, D) int8, w (D, D) int8
+    -> (..., Na, Nb) int32, bit-exact equal to xa @ w @ xb^T in int32.
+
+    Group 1: sign x sign, weight +2^{2K-2}
+    Group 2: sign x mag,  weight -2^{K-1+j*}
+    Group 3: mag  x sign, weight -2^{K-1+i*}
+    Group 4: mag  x mag,  weight +2^{i*+j*}
+    """
+    pa = to_bitplanes(xa, bits)        # (..., Na, D, K)
+    pb = to_bitplanes(xb, bits)
+    K = bits
+    sign_a = pa[..., K - 1]
+    sign_b = pb[..., K - 1]
+
+    # Group 1
+    s = (1 << (2 * K - 2)) * plane_mac(sign_a, sign_b, w)
+    # Groups 2 & 3 & 4
+    for jstar in range(K - 1):
+        s = s - (1 << (K - 1 + jstar)) * plane_mac(sign_a, pb[..., jstar], w)
+    for istar in range(K - 1):
+        s = s - (1 << (K - 1 + istar)) * plane_mac(pa[..., istar], sign_b, w)
+        for jstar in range(K - 1):
+            s = s + (1 << (istar + jstar)) * plane_mac(
+                pa[..., istar], pb[..., jstar], w)
+    return s
+
+
+def exact_scores(xa: jax.Array, xb: jax.Array, w: jax.Array) -> jax.Array:
+    """Direct int32 bilinear oracle: xa @ w @ xb^T."""
+    g = jnp.einsum("...nd,de->...ne", xa.astype(jnp.int32),
+                   w.astype(jnp.int32))
+    return jnp.einsum("...ne,...me->...nm", g, xb.astype(jnp.int32))

@@ -1,0 +1,41 @@
+"""Symmetric int8 quantization used by the paper's W8A8 score path.
+
+The CIM macro stores 8-bit weights and streams K-bit (8-bit) inputs.
+On TPU the multiplier-free bit-serial MAC maps to the MXU's native
+int8 x int8 -> int32 path; these helpers produce the (int8, scale) pairs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize(x: jax.Array, axis=-1, bits: int = 8):
+    """Symmetric per-slice quantization.
+
+    Returns (q, scale) with q int8 in [-(2^{b-1}-1), 2^{b-1}-1] and
+    x ~= q * scale, scale broadcastable against x along ``axis``.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_per_tensor(x: jax.Array, bits: int = 8):
+    q, s = quantize(x.reshape(-1), axis=0, bits=bits)
+    return q.reshape(x.shape), s.reshape(())
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_matmul(qa: jax.Array, qb: jax.Array, dims) -> jax.Array:
+    """Integer matmul with int32 accumulation (MXU-native on TPU)."""
+    return jax.lax.dot_general(
+        qa.astype(jnp.int32), qb.astype(jnp.int32), dims,
+        preferred_element_type=jnp.int32)

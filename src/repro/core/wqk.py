@@ -1,0 +1,114 @@
+"""Combined QK-weight attention scores (the paper's Eq. 1-6).
+
+At inference W_Q and W_K are constant, so fold once:
+
+    W_QK = W_Q . W_K^T   (per query head; GQA maps head h -> kv head
+                          h // q_per_kv)
+    S    = X . W_QK . X^T                                   (Eq. 3)
+
+QKV *biases* (qwen2/2.5) fold exactly by augmenting X with a constant-1
+feature (DESIGN.md S4):
+
+    [X 1] [[Wq Wk^T, Wq bk],
+           [bq^T Wk^T, bq.bk]] [X 1]^T
+      = X Wq Wk^T X^T + X Wq bk + (bq^T Wk^T X^T)^T' + bq.bk   (exact)
+
+Shapes:  x (..., N, D); wq (D, H, dh); wk (D, Hkv, dh); wqk (H, D, D)
+         (or (H, D+1, D+1) with biases).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def fold_wqk(wq: jax.Array, wk: jax.Array,
+             bq: Optional[jax.Array] = None,
+             bk: Optional[jax.Array] = None) -> jax.Array:
+    """Pre-compute per-query-head W_QK (Eq. 2). f32 accumulation.
+
+    wq: (D, H, dh), wk: (D, Hkv, dh), bq: (H, dh), bk: (Hkv, dh).
+    Returns (H, D, D) or (H, D+1, D+1) when biases are given.
+    """
+    D, H, dh = wq.shape
+    Hkv = wk.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    rep = H // Hkv
+    wkx = jnp.repeat(wk, rep, axis=1)                     # (D, H, dh)
+    wqk = jnp.einsum("dhe,fhe->hdf", wq.astype(jnp.float32),
+                     wkx.astype(jnp.float32))             # (H, D, D)
+    if bq is None and bk is None:
+        return wqk
+    bq = jnp.zeros((H, dh), jnp.float32) if bq is None else bq.astype(jnp.float32)
+    bk = jnp.zeros((Hkv, dh), jnp.float32) if bk is None else bk.astype(jnp.float32)
+    bkx = jnp.repeat(bk, rep, axis=0)                     # (H, dh)
+    # column: X Wq bk  -> (H, D); row: bq Wk^T X^T -> (H, D); corner bq.bk
+    col = jnp.einsum("dhe,he->hd", wq.astype(jnp.float32), bkx)
+    row = jnp.einsum("he,dhe->hd", bq, wkx.astype(jnp.float32))
+    corner = jnp.einsum("he,he->h", bq, bkx)
+    top = jnp.concatenate([wqk, col[:, :, None]], axis=2)           # (H,D,D+1)
+    bot = jnp.concatenate([row[:, None, :], corner[:, None, None]], axis=2)
+    return jnp.concatenate([top, bot], axis=1)            # (H, D+1, D+1)
+
+
+def augment_ones(x: jax.Array) -> jax.Array:
+    """[X 1] augmentation matching a bias-folded W_QK."""
+    ones = jnp.ones(x.shape[:-1] + (1,), x.dtype)
+    return jnp.concatenate([x, ones], axis=-1)
+
+
+def wqk_scores(x_q: jax.Array, x_kv: jax.Array, wqk: jax.Array,
+               f32_accum: bool = True) -> jax.Array:
+    """S = X_q . W_QK . X_kv^T per head (Eq. 5/6), float path.
+
+    x_q (..., Nq, Daug), x_kv (..., Nk, Daug), wqk (H, Daug, Daug)
+    -> (..., H, Nq, Nk). Two weight-stationary matmuls: G = X_q W_QK
+    streams the *raw inputs* through the stationary weights (the CIM
+    dataflow), then G X_kv^T.
+    """
+    dt = jnp.float32 if f32_accum else x_q.dtype
+    g = jnp.einsum("...nd,hde->...hne", x_q.astype(dt), wqk.astype(dt))
+    return jnp.einsum("...hne,...me->...hnm", g, x_kv.astype(dt))
+
+
+def wqk_scores_int8(x_q: jax.Array, x_kv: jax.Array, wqk: jax.Array,
+                    bits: int = 8) -> jax.Array:
+    """W8A8 integer scores: the TPU-native adaptation of the paper's
+    multiplier-free bit-serial MAC (int8 MXU instead of bit-plane adds).
+
+    Quantization: per-token X (rows of X_q / X_kv), per-tensor W_QK.
+    Dequantizes to f32 at the end. Matches ``wqk_scores`` to quantization
+    tolerance; matches the bit-serial CIM simulator *bit-exactly* on the
+    integer part (same integers, same accumulation order class).
+    """
+    qx, sx = quant.quantize(x_q, axis=-1, bits=bits)        # (...,Nq,D)
+    qy, sy = quant.quantize(x_kv, axis=-1, bits=bits)       # (...,Nk,D)
+    qw, sw = quant.quantize_per_tensor(wqk, bits=bits)      # (H,D,D)
+    # integer bilinear core: G = qx . qw  (int32), S = G . qy^T (int32->f32)
+    g = jnp.einsum("...nd,hde->...hne", qx.astype(jnp.int32),
+                   qw.astype(jnp.int32))
+    s = jnp.einsum("...hne,...me->...hnm", g.astype(jnp.float32),
+                   qy.astype(jnp.float32))
+    # scales: sx (...,Nq,1) row-wise, sy (...,Nk,1) col-wise, sw scalar
+    return s * sx[..., None, :, :] * jnp.swapaxes(sy, -1, -2)[..., None, :, :] * sw
+
+
+def factored_scores(x_q: jax.Array, x_kv: jax.Array,
+                    wq: jax.Array, wk: jax.Array,
+                    bq: Optional[jax.Array] = None,
+                    bk: Optional[jax.Array] = None) -> jax.Array:
+    """Rank-dh factored evaluation of the same bilinear form (== standard
+    QK^T without positional rotation). Used when D >> dh makes the explicit
+    fold FLOPs-prohibitive; mathematically identical scores."""
+    rep = wq.shape[1] // wk.shape[1]
+    q = jnp.einsum("...nd,dhe->...hne", x_q, wq)
+    k = jnp.einsum("...nd,dhe->...hne", x_kv, jnp.repeat(wk, rep, axis=1))
+    if bq is not None:
+        q = q + bq[:, None, :]                 # (H,1,dh) vs (...,H,N,dh)
+    if bk is not None:
+        k = k + jnp.repeat(bk, rep, axis=0)[:, None, :]
+    return jnp.einsum("...hne,...hme->...hnm", q, k)

@@ -1,0 +1,66 @@
+"""Zero-value bit-skipping statistics and cycle model (paper §III.C).
+
+The macro's input buffer skips any bit-pair where x_ii'(i*) AND x_jj'(j*)
+is zero — the word line never fires, saving the add cycle and its energy.
+A systolic MXU cannot skip data-dependently, so on TPU this lives as:
+
+  (a) a faithful *cycle/energy model*: given real input tensors, count the
+      exact number of fired vs skipped word-line events the macro would see
+      (reproduces the paper's ">=55% reduction" claim in
+      benchmarks/zeroskip_bench.py), and
+  (b) the TPU-friendly analogue — token-level padding skip via sequence
+      packing (data/pipeline.py) — which removes whole all-zero rows, the
+      dominant source of zero bits the paper cites.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitserial import to_bitplanes
+
+
+class SkipStats(NamedTuple):
+    total_events: jax.Array     # word-line events without skipping
+    fired_events: jax.Array     # events where both gating bits are 1
+    bit_density_a: jax.Array    # fraction of 1-bits in xa planes
+    bit_density_b: jax.Array
+
+    @property
+    def skip_fraction(self):
+        return 1.0 - self.fired_events / jnp.maximum(self.total_events, 1)
+
+
+def skip_stats(xa: jax.Array, xb: jax.Array, bits: int = 8) -> SkipStats:
+    """Exact count of fired word-line events for scores over (xa, xb).
+
+    A word-line event exists for every (i, j, i', j', i*, j*) tuple; it
+    fires iff xa[i, i'](i*) & xb[j, j'](j*). Because the AND factorizes,
+    fired = (sum of 1-bits over xa rows) x (sum of 1-bits over xb rows)
+    summed over (i,j) pairs — computed exactly without materializing the
+    6-D event tensor.
+
+    xa (Na, D) int8, xb (Nb, D) int8.
+    """
+    pa = to_bitplanes(xa, bits).astype(jnp.float32)   # (Na, D, K)
+    pb = to_bitplanes(xb, bits).astype(jnp.float32)
+    ones_a = jnp.sum(pa, axis=(-1, -2))               # per-row 1-bit count
+    ones_b = jnp.sum(pb, axis=(-1, -2))
+    fired = jnp.sum(ones_a) * jnp.sum(ones_b)         # sum_{i,j} n_a(i)n_b(j)
+    Na, D = xa.shape[-2], xa.shape[-1]
+    Nb = xb.shape[-2]
+    total = jnp.asarray(float(Na) * Nb * D * D * bits * bits)
+    return SkipStats(total, fired,
+                     jnp.mean(pa), jnp.mean(pb))
+
+
+def cycles_with_skip(stats: SkipStats, lanes: int = 64) -> jax.Array:
+    """Macro cycles with zero-skip: only fired events consume add cycles;
+    `lanes` parallel adder columns (64 in the paper's 64x64 array)."""
+    return stats.fired_events / lanes
+
+
+def cycles_without_skip(stats: SkipStats, lanes: int = 64) -> jax.Array:
+    return stats.total_events / lanes

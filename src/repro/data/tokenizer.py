@@ -1,0 +1,64 @@
+"""Byte-level tokenizer (no external vocab files).
+
+Vocabulary: 256 byte values + special tokens. For archs with larger
+vocabs the byte ids are hashed into the arch vocab space by a fixed
+affine map so synthetic text exercises the full embedding table without
+an external BPE asset. Deterministic and invertible on the byte range.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+N_SPECIAL = 3
+
+
+class ByteTokenizer:
+    """Byte-level tokenizer with arch-vocab spreading.
+
+    ``spread=True`` maps byte b deterministically into [N_SPECIAL, vocab)
+    via an affine hash so large embedding tables see realistic index
+    dispersion; ``spread=False`` keeps plain byte ids (+specials).
+    """
+
+    def __init__(self, vocab_size: int = 256 + N_SPECIAL,
+                 spread: bool = False):
+        assert vocab_size >= 256 + N_SPECIAL or spread, vocab_size
+        self.vocab_size = vocab_size
+        self.spread = spread and vocab_size > 512
+        # odd multiplier => bijective mod 2^k; we only need dispersion
+        self._mult = 2654435761
+        self._span = vocab_size - N_SPECIAL
+
+    def _map(self, b: np.ndarray) -> np.ndarray:
+        if not self.spread:
+            return b + N_SPECIAL
+        return (b * self._mult) % self._span + N_SPECIAL
+
+    def _unmap_table(self) -> np.ndarray:
+        # inverse lookup for decode when spread (256 entries)
+        tab = np.zeros(self.vocab_size, np.int32)
+        ids = self._map(np.arange(256))
+        tab[ids] = np.arange(256)
+        return tab
+
+    def encode(self, text: str, bos: bool = True, eos: bool = True) -> List[int]:
+        b = np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int64)
+        ids = self._map(b).tolist()
+        return ([BOS_ID] if bos else []) + ids + ([EOS_ID] if eos else [])
+
+    def decode(self, ids: Sequence[int]) -> str:
+        tab = self._unmap_table()
+        out = bytearray()
+        for i in ids:
+            if i < N_SPECIAL:
+                continue
+            if self.spread:
+                out.append(int(tab[i]))
+            else:
+                out.append(int(i - N_SPECIAL))
+        return out.decode("utf-8", errors="replace")

@@ -1,0 +1,92 @@
+"""Bit-exact CIM macro kernel: the 4-group bit-serial bilinear MAC (Eq. 10).
+
+This kernel reproduces the macro's *schedule*, not just its result:
+inputs are decomposed into two's-complement bit-planes inside the kernel
+(Eq. 8/9); each (i*, j*) bit-pair drives a 0/1-gated accumulation of the
+stationary weight tile (the word-line AND of Fig. 4b); the four sign
+groups combine with shifts and add/subtract exactly as Eq. 10. The
+weight tile is VMEM-resident — the SRAM array.
+
+The int32 result is **bit-exactly** equal to X_a · W · X_b^T, proven
+against two oracles (ref.py direct form, core.bitserial python form) in
+tests/test_kernels.py.
+
+The macro's tile is 64×64×8b; the kernel accepts any (D ≤ ~512, bits ≤ 8)
+for shape sweeps. The production path is kernels/wqk_score (int8 MXU);
+this kernel is the faithful behavioural model the energy model's op
+counts are defined against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitplane_kernel(xa_ref, xb_ref, w_ref, o_ref, *, bits: int):
+    """o (1?, BN, BM) int32 = bit-serial bilinear MAC over the tile.
+
+    xa (BN, D) int8, xb (BM, D) int8, w (D, D) int8.
+    """
+    xa = xa_ref[...].astype(jnp.int32)
+    xb = xb_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    # two's-complement planes (Eq. 8/9)
+    ua = jnp.where(xa < 0, xa + (1 << bits), xa)
+    ub = jnp.where(xb < 0, xb + (1 << bits), xb)
+
+    def plane(u, k):
+        return ((u >> k) & 1)
+
+    def mac(pa, pb):
+        """M(a,b) (Eq. 11): AND-gated weight accumulation. The 0/1-plane
+        matmul is arithmetically the word-line gating: a row of W enters
+        the adder tree iff its input bit is 1."""
+        g = jax.lax.dot_general(pa, w, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+        return jax.lax.dot_general(g, pb, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+
+    K = bits
+    sa = plane(ua, K - 1)
+    sb = plane(ub, K - 1)
+    # Group 1: sign×sign, +2^{2K-2}
+    acc = (1 << (2 * K - 2)) * mac(sa, sb)
+    # Group 2: sign×mag, -2^{K-1+j*}
+    for jstar in range(K - 1):
+        acc -= (1 << (K - 1 + jstar)) * mac(sa, plane(ub, jstar))
+    # Group 3: mag×sign, -2^{K-1+i*};  Group 4: mag×mag, +2^{i*+j*}
+    for istar in range(K - 1):
+        pa = plane(ua, istar)
+        acc -= (1 << (K - 1 + istar)) * mac(pa, sb)
+        for jstar in range(K - 1):
+            acc += (1 << (istar + jstar)) * mac(pa, plane(ub, jstar))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_n", "block_m",
+                                             "interpret"))
+def bitplane_scores(xa: jax.Array, xb: jax.Array, w: jax.Array, *,
+                    bits: int = 8, block_n: int = 64, block_m: int = 64,
+                    interpret: bool = False) -> jax.Array:
+    """xa (N, D) int8, xb (M, D) int8, w (D, D) int8 -> (N, M) int32,
+    == xa @ w @ xb^T exactly, computed bit-serially (Eq. 10)."""
+    N, D = xa.shape
+    M = xb.shape[0]
+    assert w.shape == (D, D)
+    assert N % block_n == 0 and M % block_m == 0
+    grid = (N // block_n, M // block_m)
+    return pl.pallas_call(
+        functools.partial(_bitplane_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((D, D), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, M), jnp.int32),
+        interpret=interpret,
+    )(xa, xb, w)

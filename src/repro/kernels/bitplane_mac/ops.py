@@ -1,0 +1,39 @@
+"""jit'd wrapper for the bit-serial macro kernel: padding + macro-tiled
+iteration, mirroring how the 64×64 macro sweeps a larger weight matrix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitplane_mac.kernel import bitplane_scores
+
+
+def _pad_axis(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_n", "block_m",
+                                             "interpret"))
+def scores(xa: jax.Array, xb: jax.Array, w: jax.Array, *, bits: int = 8,
+           block_n: int = 64, block_m: int = 64,
+           interpret: bool = False) -> jax.Array:
+    """Bit-serial integer scores with automatic padding.
+
+    xa (N, D) int8, xb (M, D) int8, w (D, D) int8 -> (N, M) int32.
+    Zero-padding is exact for the bilinear form (zero rows contribute 0 —
+    the same fact the zero-skip mechanism exploits).
+    """
+    N, M = xa.shape[0], xb.shape[0]
+    xa_p = _pad_axis(xa, block_n, 0)
+    xb_p = _pad_axis(xb, block_m, 0)
+    out = bitplane_scores(xa_p, xb_p, w, bits=bits, block_n=block_n,
+                          block_m=block_m, interpret=interpret)
+    return out[:N, :M]

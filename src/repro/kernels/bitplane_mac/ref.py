@@ -1,0 +1,21 @@
+"""Oracles for the bit-serial macro kernel.
+
+Two independent references:
+  * ``direct_ref`` — the plain int32 bilinear form (what Eq. 10 must equal).
+  * ``bitserial_ref`` — core.bitserial's python 4-group expansion (the
+    same schedule as the kernel, built from jnp ops outside Pallas).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import bitserial
+
+
+def direct_ref(xa: jax.Array, xb: jax.Array, w: jax.Array) -> jax.Array:
+    return bitserial.exact_scores(xa, xb, w)
+
+
+def bitserial_ref(xa: jax.Array, xb: jax.Array, w: jax.Array,
+                  bits: int = 8) -> jax.Array:
+    return bitserial.bitserial_scores(xa, xb, w, bits=bits)

@@ -1,0 +1,135 @@
+"""Blockwise masked score+softmax+AV kernel (flash-attention schedule).
+
+The memory-roofline optimization for prefill/training attention: the
+(N × M) score matrix never materializes in HBM — each (BN × BM) tile is
+produced, softmaxed online and contracted with V inside VMEM.
+
+Works for both score modes:
+  * standard: q = rope(X·Wq) per head, k = rope(X·Wk)
+  * wqk     : q = X·W_QK^h (the weight-stationary first pass),
+              k = raw X_kv — S tile = q·kᵀ is exactly Eq. 5's
+              (X W_QK) Xᵀ, so the paper's reformulation composes with
+              the flash schedule unchanged (this is the beyond-paper
+              fusion recorded in EXPERIMENTS.md §Perf).
+
+Grid (H, I, J), J innermost; the running (max, sum, acc) state lives in
+VMEM scratch persisted across J steps (TPU grid order is sequential).
+Causal/window tiles that are fully masked are skipped with pl.when —
+the block-level analogue of the macro's zero-skip (skips *structural*
+zeros; the macro skips value zeros).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                  acc_sc, m_sc, l_sc, *,
+                  scale: float, causal: bool, window: int,
+                  block_n: int, block_m: int, n_kv_blocks: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    q_pos = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n, 1), 0)
+    k_pos = j * block_m + jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    # structural skip: whole tile outside the causal/window band
+    live = True
+    if causal:
+        live = (j * block_m) <= (i * block_n + block_n - 1)
+    if window > 0:
+        live = live & ((j * block_m + block_m - 1)
+                       > (i * block_n - window))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        ok = jnp.ones((block_n, block_m), jnp.bool_)
+        if causal:
+            ok = ok & (k_pos <= q_pos)
+        if window > 0:
+            ok = ok & (k_pos > q_pos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_sc[...] = acc_sc[...] * alpha + pv
+        m_sc[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _final():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / l).astype(o_ref.dtype)
+        lse_ref[0] = (m_sc[...] + jnp.log(l))[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "block_n", "block_m", "interpret"))
+def flash_scores(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 scale: float = 1.0, causal: bool = True,
+                 window: int = 0, block_n: int = 128, block_m: int = 128,
+                 interpret: bool = False):
+    """q (H, N, E), k (H_k, M, E), v (H_k, M, dv) -> (out (H, N, dv) in
+    q.dtype, lse (H, N) f32). H_k ∈ {H, 1}: pass H_k=1 to share one K/V
+    (or raw-X) stream across all heads — the wqk dataflow. window<=0
+    means no sliding window. N, M must divide by the block sizes
+    (ops.py pads)."""
+    H, N, E = q.shape
+    Hk, M, dv = v.shape
+    assert k.shape == (Hk, M, E), (k.shape, (Hk, M, E))
+    assert Hk in (1, H)
+    assert N % block_n == 0 and M % block_m == 0
+    nj = M // block_m
+    grid = (H, N // block_n, nj)
+    kidx = (lambda h, i, j: (0, j, 0)) if Hk == 1 else \
+           (lambda h, i, j: (h, j, 0))
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_n=block_n, block_m=block_m, n_kv_blocks=nj)
+    from jax.experimental.pallas import tpu as pltpu
+    out, lse = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, E), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_m, E), kidx),
+            pl.BlockSpec((1, block_m, dv), kidx),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n, dv), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_n), lambda h, i, j: (h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, N, dv), q.dtype),
+            jax.ShapeDtypeStruct((H, N), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_n, dv), jnp.float32),
+            pltpu.VMEM((block_n, 1), jnp.float32),
+            pltpu.VMEM((block_n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse

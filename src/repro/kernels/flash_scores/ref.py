@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the blockwise score+softmax+AV kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_scores_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     scale: float = 1.0, causal: bool = True,
+                     window: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Materialized-softmax reference. Shapes as kernel.flash_scores."""
+    H, N, E = q.shape
+    Hk, M, dv = v.shape
+    if Hk == 1 and H > 1:
+        k = jnp.broadcast_to(k, (H, M, E))
+        v = jnp.broadcast_to(v, (H, M, dv))
+    s = jnp.einsum("hne,hme->hnm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(N)[:, None]
+    kpos = jnp.arange(M)[None, :]
+    ok = jnp.ones((N, M), bool)
+    if causal:
+        ok = ok & (kpos <= qpos)
+    if window > 0:
+        ok = ok & (kpos > qpos - window)
+    s = jnp.where(ok[None], s, NEG_INF)
+    lse = jax.nn.logsumexp(s, axis=-1)
+    a = jnp.exp(s - lse[..., None])
+    out = jnp.einsum("hnm,hmd->hnd", a, v.astype(jnp.float32))
+    return out.astype(q.dtype), lse

@@ -1,0 +1,82 @@
+"""Fused W8A8 attention-score kernel: S_h = (X_q · W_QK^h) · X_kv^T.
+
+TPU adaptation of the paper's weight-stationary CIM dataflow:
+the per-head ``W_QK`` tile is **resident in VMEM** (playing the SRAM
+array's role), and the *raw inputs* X stream through it — the dynamic
+matrices Q/K never exist. Both contractions run on the MXU's native
+int8×int8→int32 path (the idiomatic port of the multiplier-free
+bit-serial MAC; the bit-exact per-bit schedule lives in
+kernels/bitplane_mac).
+
+Grid (H, I, J): heads outer so each head's W_QK is loaded once and
+reused for all (I×J) score tiles — weight-stationary across the whole
+score matrix exactly like the macro. Block shapes are MXU-aligned
+(sublane 8 / lane 128 multiples for int8).
+
+Constraint: the full (D_aug × D_aug) W_QK of one head must fit VMEM
+(int8: D ≤ ~2048 within a 16 MB budget incl. tiles). That is the
+paper's own regime (macro D=64; whisper D=385 augmented). Larger-D
+archs use the factored/standard path (DESIGN.md §4 FLOPs honesty).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_M = 128
+
+
+def _score_kernel(x_ref, y_ref, w_ref, o_ref):
+    """One (BN × BM) int32 score tile for one head.
+
+    x_ref (BN, D) int8; y_ref (BM, D) int8; w_ref (1, D, D) int8;
+    o_ref (1, BN, BM) int32.
+    """
+    x = x_ref[...]
+    y = y_ref[...]
+    w = w_ref[0]
+    # G = X · W_QK : weight-stationary pass (raw inputs hit the array)
+    g = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    # S = G · Y^T : second pass over the same stationary tile's output
+    s = jax.lax.dot_general(
+        g, y.astype(jnp.int32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    o_ref[0] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m",
+                                             "interpret"))
+def wqk_score_int8(x_q: jax.Array, x_kv: jax.Array, wqk: jax.Array,
+                   *, block_n: int = DEFAULT_BLOCK_N,
+                   block_m: int = DEFAULT_BLOCK_M,
+                   interpret: bool = False) -> jax.Array:
+    """x_q (N, D) int8, x_kv (M, D) int8, wqk (H, D, D) int8
+    -> (H, N, M) int32 integer scores.
+
+    N and M must be multiples of the block sizes (ops.py pads).
+    """
+    N, D = x_q.shape
+    M = x_kv.shape[0]
+    H = wqk.shape[0]
+    assert wqk.shape == (H, D, D), (wqk.shape, D)
+    assert N % block_n == 0 and M % block_m == 0, (N, M, block_n, block_m)
+    grid = (H, N // block_n, M // block_m)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, D), lambda h, i, j: (i, 0)),
+            pl.BlockSpec((block_m, D), lambda h, i, j: (j, 0)),
+            pl.BlockSpec((1, D, D), lambda h, i, j: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, block_m),
+                               lambda h, i, j: (h, i, j)),
+        out_shape=jax.ShapeDtypeStruct((H, N, M), jnp.int32),
+        interpret=interpret,
+    )(x_q, x_kv, wqk)

@@ -1,0 +1,230 @@
+"""HLO artifact analysis: collective-byte parsing + roofline terms.
+
+``cost_analysis()`` gives HLO_FLOPs / HLO_bytes for the per-device
+partitioned module; collective bytes are NOT included there, so we parse
+the compiled HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute /
+ragged-all-to-all op.
+
+Hardware constants (TPU v5e-class target, per chip):
+    197 TFLOP/s bf16  ·  819 GB/s HBM  ·  ~50 GB/s/link ICI.
+
+Terms (seconds, per chip — the module is already per-device after SPMD):
+    compute    = HLO_FLOPs / peak_FLOPs
+    memory     = HLO_bytes / HBM_bw
+    collective = collective_operand_bytes / link_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# e.g.  bf16[16,4096,512]{2,1,0}
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# output shape(s) = op(...): scheduled HLO drops operand types, so the
+# measurable quantity is the op's OUTPUT shape left of the op name.
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+("
+    + "|".join(_COLLECTIVES) + r")(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))               # [n_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+# header: `%name (args...) -> type {` — args may contain nested tuple
+# parens, so match only the leading name
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"while\(.*?body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+
+
+def _wire_bytes(kind: str, bytes_: float, n: int) -> float:
+    """Ring-algorithm per-device wire bytes (B = output bytes):
+      all-gather       B·(n-1)/n    (output is the gathered full tensor)
+      all-reduce       2·B·(n-1)/n  (reduce-scatter + all-gather phases)
+      reduce-scatter   B·(n-1)      (output is the per-shard tensor)
+      all-to-all       B·(n-1)/n
+      collective-permute  B         (point-to-point)
+    """
+    if kind == "all-gather":
+        return bytes_ * (n - 1) / n
+    if kind == "all-reduce":
+        return 2 * bytes_ * (n - 1) / n
+    if kind == "reduce-scatter":
+        return bytes_ * (n - 1)
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return bytes_ * (n - 1) / n
+    return float(bytes_)
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not line.startswith((" ", "\t")) and stripped.endswith("{"):
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _comp_multipliers(comps: Dict[str, list]) -> Dict[str, float]:
+    """Execution-count multiplier per computation: while bodies run
+    known_trip_count times PER execution of their parent computation
+    (nested scans — e.g. flash k-blocks inside the layer scan — compose
+    multiplicatively). Unannotated whiles default to 1 (conservative)."""
+    parent_of: Dict[str, tuple] = {}          # body -> (parent, trip)
+    for cname, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m is None:
+                continue
+            t = _TRIP_RE.search(line)
+            trip = float(t.group(1)) if t else 1.0
+            parent_of[m.group(1)] = (cname, trip)
+
+    mult: Dict[str, float] = {}
+
+    def resolve(name: str, depth=0) -> float:
+        if name in mult:
+            return mult[name]
+        if depth > 64 or name not in parent_of:
+            mult[name] = 1.0
+            return 1.0
+        parent, trip = parent_of[name]
+        m = resolve(parent, depth + 1) * trip
+        mult[name] = m
+        return m
+
+    for cname in comps:
+        resolve(cname)
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes per collective kind over ONE step execution.
+
+    Collectives inside while (scan) bodies are multiplied by the loop's
+    ``known_trip_count`` (nesting-aware), because XLA text contains each
+    body once while the step executes it trip-count times.
+    ``-start``/``-done`` async pairs are counted once (on -start).
+    """
+    comps = _split_computations(hlo_text)
+    mults = _comp_multipliers(comps)
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for cname, lines in comps.items():
+        mult = mults.get(cname, 1.0)
+        for line in lines:
+            m = _OP_RE.search(line)
+            if m is None or m.group(3) == "-done":
+                continue
+            kind = m.group(2)
+            n = _group_size(line)
+            bytes_ = sum(_shape_bytes(dt, dims)
+                         for dt, dims in _SHAPE_RE.findall(m.group(1)))
+            out[kind] += mult * _wire_bytes(kind, bytes_, n)
+    res = {k: int(v) for k, v in out.items()}
+    res["total"] = sum(res[k] for k in _COLLECTIVES)
+    return res
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective operand bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: Optional[float] = None    # 6·N·D analytic, per device
+    useful_ratio: Optional[float] = None   # model_flops / flops
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["bound_s"] = self.bound_s
+        return d
+
+
+def roofline_terms(cost: dict, coll: Dict[str, int],
+                   model_flops_per_dev: Optional[float] = None) -> Roofline:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    hbm = float(cost.get("bytes accessed", 0.0) or 0.0)
+    cb = float(coll.get("total", 0))
+    r = Roofline(
+        flops=flops, hbm_bytes=hbm, coll_bytes=cb,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=cb / LINK_BW,
+        model_flops=model_flops_per_dev,
+    )
+    if model_flops_per_dev and flops > 0:
+        r.useful_ratio = model_flops_per_dev / flops
+    return r
+
+
+def model_flops(cfg, shp) -> float:
+    """Analytic MODEL_FLOPS for the whole cell: 6·N_active·D_tokens for
+    train (fwd+bwd), 2·N_active·D_tokens for inference graphs."""
+    n = cfg.active_param_count()
+    if shp.kind == "train":
+        toks = shp.global_batch * shp.seq_len
+        return 6.0 * n * toks
+    if shp.kind == "prefill":
+        toks = shp.global_batch * shp.seq_len
+        return 2.0 * n * toks
+    # decode: one token per sequence
+    return 2.0 * n * shp.global_batch

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state. The dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing jax.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the local device (smoke tests, examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fsdp_axes(mesh) -> tuple:
+    """Axes parameters shard over FSDP-style (within-pod only: cross-pod
+    parameter gathers would traverse the slow inter-pod links every layer;
+    pods stay pure DP with one gradient all-reduce per step)."""
+    return ("data",)

@@ -1,0 +1,137 @@
+"""Cell definitions for the dry-run: per-(arch × shape) input specs and
+step functions (train_step / prefill_step / serve_step).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins only — weak-type
+correct, shardable, zero allocation. ``decode_*`` / ``long_*`` cells
+lower ``serve_step`` (one new token against a seq_len cache); ``train_*``
+lowers the full train step (fwd+bwd+AdamW); ``prefill_*`` lowers the
+batched prompt-ingestion graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import build_model
+from repro.train import trainer as trainer_lib
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+WHISPER_ENC_FRAMES = 1500          # 30 s audio, post-conv stride-2
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> Dict[str, Any]:
+    B, S = shp.global_batch, shp.seq_len
+    specs = {"tokens": _sds((B, S), I32),
+             "labels": _sds((B, S), I32),
+             "loss_mask": _sds((B, S), F32)}
+    if cfg.enc_dec:
+        specs["enc_embeds"] = _sds((B, WHISPER_ENC_FRAMES, cfg.d_model), F32)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> Dict[str, Any]:
+    B, S = shp.global_batch, shp.seq_len
+    if cfg.enc_dec:
+        # audio: encoder carries the content; decoder starts from BOS.
+        # S plays the decoder-context role in this synthetic cell.
+        return {"tokens": _sds((B, S), I32),
+                "lengths": _sds((B,), I32),
+                "enc_embeds": _sds((B, WHISPER_ENC_FRAMES, cfg.d_model), F32)}
+    if cfg.frontend == "vision":
+        return {"embeds": _sds((B, S, cfg.d_model), F32),
+                "lengths": _sds((B,), I32)}
+    return {"tokens": _sds((B, S), I32), "lengths": _sds((B,), I32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> Dict[str, Any]:
+    B, S = shp.global_batch, shp.seq_len
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {"cache": cache, "token": _sds((B,), I32), "pos": _sds((B,), I32)}
+
+
+def input_specs(arch, shape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one
+    (arch × shape) cell — weak-type-correct, shardable, no allocation.
+    ``arch``/``shape`` may be names or config objects."""
+    from repro.configs.base import SHAPES, get_arch
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    shp = SHAPES[shape] if isinstance(shape, str) else shape
+    return {"train": train_input_specs, "prefill": prefill_input_specs,
+            "decode": decode_input_specs}[shp.kind](cfg, shp)
+
+
+# minimum grad-accumulation factor that fits 16 GB HBM/chip at train_4k
+# (measured via the dry-run memory analysis; 1 = fits without accumulation)
+_TRAIN_MICROBATCHES = {
+    "qwen2-72b": 4,
+    "mixtral-8x22b": 4,
+    "qwen3-moe-235b-a22b": 4,
+    "jamba-1.5-large-398b": 4,
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shp: ShapeConfig
+    kind: str                       # train | prefill | decode
+    fn: Callable                    # (params, **inputs)
+    inputs: Dict[str, Any]          # ShapeDtypeStructs
+    donate: Tuple[int, ...] = ()
+    tc: Any = None                  # TrainConfig for train cells
+
+
+def build_cell(cfg: ModelConfig, shp: ShapeConfig,
+               tc: trainer_lib.TrainConfig = None) -> Cell:
+    model = build_model(cfg)
+    if shp.kind == "train":
+        # Grad-accumulation is a memory/collective trade: k microbatches
+        # cut transient activations ~k× but re-gather every FSDP/TP weight
+        # per microbatch (measured 3.6× on the collective term — see
+        # EXPERIMENTS.md §Perf). Default mb=1 (collective-optimal); only
+        # cells that do NOT fit 16 GB HBM at mb=1 get the minimum mb that
+        # fits (memory is the hard constraint, collectives overlap).
+        mb = _TRAIN_MICROBATCHES.get(cfg.name, 1)
+        ocfg = trainer_lib.adamw.AdamWConfig(
+            moment_dtype="bfloat16" if mb > 1 else "float32")
+        tc = tc or trainer_lib.TrainConfig(microbatches=mb, adamw=ocfg)
+        step = trainer_lib.make_train_step(model, tc)
+        return Cell(cfg, shp, "train", step, train_input_specs(cfg, shp),
+                    donate=(0, 1), tc=tc)
+    # NOTE (§Perf hillclimb B, refuted): dropping SSD head-sharding for
+    # inference graphs was hypothesized to remove reshard overhead; it
+    # MEASURED 24% WORSE (mamba2 prefill collective 6.27 -> 7.79 s) —
+    # GSPMD's alternative placement moves more bytes. Constraint kept on.
+    if shp.kind == "prefill":
+        max_len = shp.seq_len
+        fn = lambda p, batch: model.prefill(p, batch, max_len)
+        return Cell(cfg, shp, "prefill", fn, prefill_input_specs(cfg, shp))
+    # decode: one new token against a seq_len cache
+    fn = lambda p, cache, token, pos: model.decode_step(p, cache, token, pos)
+    return Cell(cfg, shp, "decode", fn, decode_input_specs(cfg, shp),
+                donate=(1,))
+
+
+def abstract_state(cfg: ModelConfig, kind: str,
+                   tc: trainer_lib.TrainConfig = None):
+    """(params_sds, opt_sds|None) without allocation."""
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if kind != "train":
+        return params, None
+    tc = tc or trainer_lib.TrainConfig()
+    opt = jax.eval_shape(lambda: trainer_lib.init_opt_state(
+        jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), params), tc))
+    return params, opt

@@ -1,0 +1,370 @@
+"""Attention layers: MHA/GQA, causal / sliding-window / local:global masks,
+full-sequence and cached-decode paths, with the paper's score modes plumbed
+through ``core.attention_scores``.
+
+Layouts: x (B, N, D); wq (D, H, dh); wk/wv (D, Hkv, dh); wo (H, dh, D).
+Head axes shard over the "model" mesh axis; D over "data" (FSDP).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention_scores import ScoreWeights, compute_scores
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def init_attention(rng, cfg, dtype, cross: bool = False) -> dict:
+    d, H, Hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H, dh), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, Hkv, dh), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, Hkv, dh), dtype) * s,
+        "wo": jax.random.normal(ks[3], (H, dh, d), dtype) * (1.0 / math.sqrt(H * dh)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, dh), dtype)
+        p["bk"] = jnp.zeros((Hkv, dh), dtype)
+        p["bv"] = jnp.zeros((Hkv, dh), dtype)
+    return p
+
+
+def score_weights(p: dict) -> ScoreWeights:
+    return ScoreWeights(wq=p["wq"], wk=p["wk"],
+                        bq=p.get("bq"), bk=p.get("bk"),
+                        wqk=p.get("wqk"))
+
+
+def _mask_bias(positions_q, positions_kv, kind: str,
+               window: Optional[int]) -> jax.Array:
+    """Additive mask bias (..., Nq, Nk). kind: causal|window|none."""
+    if kind == "none":
+        iq = positions_q[..., :, None]
+        ik = positions_kv[..., None, :]
+        return jnp.zeros(jnp.broadcast_shapes(iq.shape, ik.shape), jnp.float32)
+    iq = positions_q[..., :, None]
+    ik = positions_kv[..., None, :]
+    ok = ik <= iq
+    if window is not None:
+        # window may be a traced per-layer scalar (gemma local:global
+        # scan); BIG_WINDOW makes it a no-op arithmetically
+        ok = ok & (ik > iq - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _values(p: dict, x_kv: jax.Array, H: int) -> jax.Array:
+    """V projection, repeated to H query heads: (..., H, Nk, dh)."""
+    Hkv = p["wv"].shape[1]
+    v = jnp.einsum("...nd,dhe->...hne", x_kv, p["wv"].astype(x_kv.dtype))
+    if "bv" in p:
+        v = v + p["bv"][:, None, :].astype(v.dtype)
+    return jnp.repeat(v, H // Hkv, axis=-3)
+
+
+def attention_full(p: dict, x_q: jax.Array, x_kv: jax.Array, cfg, *,
+                   positions_q: jax.Array, positions_kv: jax.Array,
+                   mask_kind: str = "causal",
+                   window: Optional[jax.Array] = None,
+                   score_mode: Optional[str] = None) -> jax.Array:
+    """Full-sequence attention (training / prefill). -> (..., Nq, D)."""
+    mode = score_mode or cfg.score_mode
+    # long sequences: blockwise online-softmax path (the flash_scores
+    # schedule in portable jnp — S never materializes). Inference-side
+    # (prefill) only; train_4k stays on the quadratic+remat path.
+    min_len = getattr(cfg, "blockwise_min_len", 16384)
+    if (x_kv.shape[-2] >= min_len and mask_kind in ("causal", "none")
+            and positions_q.ndim == 1):
+        return _attention_full_blockwise(
+            p, x_q, x_kv, cfg, positions_q=positions_q,
+            positions_kv=positions_kv, mask_kind=mask_kind,
+            window=window, mode=mode)
+    H, dh = cfg.num_heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(dh)
+    rope_fn = None
+    if cfg.pos_emb == "rope" and mode == "standard":
+        rope_fn = lambda t, which: layers.apply_rope(
+            t, positions_q if which == "q" else positions_kv, cfg.rope_theta)
+    s = compute_scores(mode, x_q, x_kv, score_weights(p), scale, rope_fn)
+    if cfg.logit_softcap:
+        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+    bias = _mask_bias(positions_q, positions_kv, mask_kind, window)
+    s = s + bias[..., None, :, :]          # broadcast over head axis
+    a = jax.nn.softmax(s, axis=-1).astype(x_q.dtype)
+    v = _values(p, x_kv, H)
+    o = jnp.einsum("...hnm,...hme->...hne", a, v)
+    return jnp.einsum("...hne,hed->...nd", o, p["wo"].astype(x_q.dtype))
+
+
+# ------------------------------------------------- blockwise (flash) path
+
+def _blockwise_core(q, k, v, pos_q, pos_k, valid_k, *, scale, causal,
+                    window, softcap, block_m):
+    """Online-softmax attention over KV blocks with a custom-VJP
+    backward (models/flash.py) — neither forward scores nor backward
+    score-gradients ever materialize.
+
+    q (B, Gs, Rs, N, E): score groups (standard GQA: Gs=Hkv, Rs=q_per_kv;
+    wqk mode: Gs=1, Rs=H — one shared raw-X K-stream, the paper's
+    dataflow). k (B, Gs, M, E); v (B, Hkv, M, dv); pos_* 1-D positions;
+    valid_k (M,) masks padding. H = Gs*Rs must equal Hkv*Rv.
+    """
+    from repro.models import flash
+    from repro.sharding import act
+    q = act.constrain_grouped_q(q)      # row-parallel attention over TP
+    return flash.attend(q, k, v, pos_q, pos_k, scale=scale, causal=causal,
+                        window=window, softcap=softcap, block_m=block_m,
+                        valid_k=valid_k)
+
+
+def _attention_full_blockwise(p, x_q, x_kv, cfg, *, positions_q,
+                              positions_kv, mask_kind, window, mode):
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(dh)
+    dt = x_q.dtype
+    B = x_q.shape[0] if x_q.ndim == 3 else 1
+    xq3 = x_q if x_q.ndim == 3 else x_q[None]
+    xk3 = x_kv if x_kv.ndim == 3 else x_kv[None]
+    causal = mask_kind == "causal"
+    block_m = getattr(cfg, "attn_block_m", 1024)
+    valid = jnp.ones((xk3.shape[-2],), bool)
+
+    v = jnp.einsum("bnd,dhe->bhne", xk3, p["wv"].astype(dt))
+    if "bv" in p:
+        v = v + p["bv"][:, None, :].astype(dt)
+
+    if mode == "standard":
+        q = jnp.einsum("bnd,dhe->bhne", xq3, p["wq"].astype(dt))
+        k = jnp.einsum("bnd,dhe->bhne", xk3, p["wk"].astype(dt))
+        if "bq" in p:
+            q = q + p["bq"][:, None, :].astype(dt)
+        if "bk" in p:
+            k = k + p["bk"][:, None, :].astype(dt)
+        if cfg.pos_emb == "rope":
+            q = layers.apply_rope(q, positions_q, cfg.rope_theta)
+            k = layers.apply_rope(k, positions_kv, cfg.rope_theta)
+        q = q.reshape(B, Hkv, H // Hkv, q.shape[-2], dh)
+        o = _blockwise_core(q, k, v, positions_q, positions_kv, valid,
+                            scale=scale, causal=causal, window=window,
+                            softcap=cfg.logit_softcap, block_m=block_m)
+    else:
+        from repro.core import wqk as wqk_mod
+        sw = score_weights(p)
+        w = sw.wqk if sw.wqk is not None else wqk_mod.fold_wqk(
+            sw.wq, sw.wk, sw.bq, sw.bk)
+        xq_s, xk_s = xq3, xk3
+        if w.shape[-1] == xq3.shape[-1] + 1:
+            xq_s = wqk_mod.augment_ones(xq3)
+            xk_s = wqk_mod.augment_ones(xk3)
+        if mode == "wqk_int8":
+            # fake-quant (quantize->dequantize) reproduces the W8A8
+            # numerics blockwise without materializing int32 scores
+            from repro.core import quant
+            qg, sg = quant.quantize(xq_s, axis=-1)
+            xq_s = (qg.astype(jnp.float32) * sg).astype(xq_s.dtype)
+            qk_, sk_ = quant.quantize(xk_s, axis=-1)
+            xk_s = (qk_.astype(jnp.float32) * sk_).astype(xk_s.dtype)
+            qw, sw_ = quant.quantize_per_tensor(w)
+            w = (qw.astype(jnp.float32) * sw_).astype(w.dtype)
+        g = jnp.einsum("bnd,hde->bhne", xq_s.astype(jnp.float32),
+                       w.astype(jnp.float32)).astype(dt)
+        q = g[:, None]                                  # Gs=1, Rs=H
+        k = xk_s[:, None]                               # shared raw-X stream
+        o = _blockwise_core(q, k, v, positions_q, positions_kv, valid,
+                            scale=scale, causal=causal, window=window,
+                            softcap=cfg.logit_softcap, block_m=block_m)
+    out = jnp.einsum("bhne,hed->bnd", o.astype(dt), p["wo"].astype(dt))
+    return out if x_q.ndim == 3 else out[0]
+
+
+# ------------------------------------------------------------------- decode
+
+class KVCache(NamedTuple):
+    """Per-layer decode cache. Exactly one of (k) or (x) is used for
+    scores depending on the cache mode; v is None in pure-X mode
+    (recomputed from x — the paper's weight-stationary dataflow).
+    With cfg.cache_quant == "int8", x is int8 and xs holds per-token
+    scales (the macro's own 8-bit input format)."""
+    k: Optional[jax.Array] = None   # (B, Smax, Hkv, dh)
+    v: Optional[jax.Array] = None   # (B, Smax, Hkv, dh)
+    x: Optional[jax.Array] = None   # (B, Smax, D)  raw inputs (wqk modes)
+    xs: Optional[jax.Array] = None  # (B, Smax, 1) f32 scales (int8 cache)
+    ks: Optional[jax.Array] = None  # (B, Smax, Hkv, 1) scales (int8 kv)
+    vs: Optional[jax.Array] = None  # (B, Smax, Hkv, 1) scales (int8 kv)
+
+
+def cache_mode_for(cfg) -> str:
+    """kv: standard; xv: X-cache scores + V-cache; x: X only (V recomputed)."""
+    if getattr(cfg, "cache_mode", None):
+        return cfg.cache_mode
+    if cfg.score_mode == "standard":
+        return "kv"
+    # X-only cache wins memory iff D < 2*Hkv*dh (DESIGN.md §4)
+    if cfg.d_model < 2 * cfg.num_kv_heads * cfg.head_dim:
+        return "x"
+    return "xv"
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype,
+                  mode: Optional[str] = None) -> KVCache:
+    mode = mode or cache_mode_for(cfg)
+    Hkv, dh, D = cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    mk = lambda *shp: jnp.zeros(shp, dtype)
+    q8 = getattr(cfg, "cache_quant", None) == "int8"
+    if mode == "kv":
+        if q8:
+            return KVCache(
+                k=jnp.zeros((batch, max_len, Hkv, dh), jnp.int8),
+                v=jnp.zeros((batch, max_len, Hkv, dh), jnp.int8),
+                ks=jnp.ones((batch, max_len, Hkv, 1), jnp.float32),
+                vs=jnp.ones((batch, max_len, Hkv, 1), jnp.float32))
+        return KVCache(k=mk(batch, max_len, Hkv, dh),
+                       v=mk(batch, max_len, Hkv, dh))
+    x = (jnp.zeros((batch, max_len, D), jnp.int8) if q8
+         else mk(batch, max_len, D))
+    xs = jnp.ones((batch, max_len, 1), jnp.float32) if q8 else None
+    if mode == "xv":
+        return KVCache(v=mk(batch, max_len, Hkv, dh), x=x, xs=xs)
+    return KVCache(x=x, xs=xs)
+
+
+def write_x(cache: KVCache, x_new: jax.Array, cfg, *, pos=None) -> KVCache:
+    """Write raw-input rows into the X-cache, quantizing to the macro's
+    int8 input format when cfg.cache_quant == 'int8'. pos=None fills
+    from the origin (prefill); else per-batch positions (decode)."""
+    if cache.xs is not None:
+        from repro.core import quant
+        q, s = quant.quantize(x_new, axis=-1)
+        if pos is None:
+            from repro.models.model import _fill_seq
+            return cache._replace(x=_fill_seq(cache.x, q),
+                                  xs=_fill_seq(cache.xs, s))
+        return cache._replace(x=_update_at(cache.x, q, pos),
+                              xs=_update_at(cache.xs, s, pos))
+    if pos is None:
+        from repro.models.model import _fill_seq
+        return cache._replace(x=_fill_seq(cache.x, x_new))
+    return cache._replace(x=_update_at(cache.x, x_new, pos))
+
+
+def read_x(cache: KVCache, dtype) -> jax.Array:
+    """Dequantized view of the X-cache (fused on TPU; HBM reads int8)."""
+    if cache.xs is not None:
+        return (cache.x.astype(jnp.float32) * cache.xs).astype(dtype)
+    return cache.x
+
+
+def write_kv(cache: KVCache, k_new, v_new, cfg, *, pos=None) -> KVCache:
+    """Write K/V rows (B, n, Hkv, dh), int8-quantizing per (token, head)
+    when cfg.cache_quant == 'int8' — the W8A8 storage format applied to
+    the conventional cache. pos=None fills from origin (prefill)."""
+    q8 = cache.ks is not None
+    if q8:
+        from repro.core import quant
+        if k_new is not None:
+            k_new, ks = quant.quantize(k_new, axis=-1)
+        if v_new is not None:
+            v_new, vs = quant.quantize(v_new, axis=-1)
+    if pos is None:
+        from repro.models.model import _fill_seq
+        upd = _fill_seq
+    else:
+        upd = lambda c, n: _update_at(c, n, pos)
+    if k_new is not None:
+        cache = cache._replace(k=upd(cache.k, k_new))
+        if q8:
+            cache = cache._replace(ks=upd(cache.ks, ks))
+    if v_new is not None:
+        cache = cache._replace(v=upd(cache.v, v_new))
+        if q8:
+            cache = cache._replace(vs=upd(cache.vs, vs))
+    return cache
+
+
+def read_kv(cache: KVCache, dtype):
+    """(k, v) dequantized views (int8 HBM reads; dequant fuses on TPU)."""
+    k, v = cache.k, cache.v
+    if cache.ks is not None and k is not None:
+        k = (k.astype(jnp.float32) * cache.ks).astype(dtype)
+    if cache.vs is not None and v is not None:
+        v = (v.astype(jnp.float32) * cache.vs).astype(dtype)
+    return k, v
+
+
+def _update_at(cache: jax.Array, new: jax.Array,
+               pos: jax.Array) -> jax.Array:
+    """cache (B, S, ...) <- new (B, 1, ...) at per-batch positions (B,)."""
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+    return jax.vmap(upd)(cache, new, pos)
+
+
+def attention_decode(p: dict, x_new: jax.Array, cache: KVCache,
+                     pos: jax.Array, cfg, *,
+                     window: Optional[int] = None,
+                     score_mode: Optional[str] = None):
+    """One decode step. x_new (B, 1, D); pos (B,) current index.
+    Returns (out (B, 1, D), new_cache)."""
+    mode = score_mode or cfg.score_mode
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(dh)
+    B, _, D = x_new.shape
+    Smax = (cache.k if cache.k is not None else
+            (cache.x if cache.x is not None else cache.v)).shape[1]
+    dt = x_new.dtype
+
+    if mode == "standard":
+        q = jnp.einsum("bnd,dhe->bhne", x_new, p["wq"].astype(dt))
+        k_new = jnp.einsum("bnd,dhe->bnhe", x_new, p["wk"].astype(dt))
+        v_new = jnp.einsum("bnd,dhe->bnhe", x_new, p["wv"].astype(dt))
+        if "bq" in p:
+            q = q + p["bq"][:, None, :].astype(dt)
+            k_new = k_new + p["bk"][None, None].astype(dt)
+            v_new = v_new + p["bv"][None, None].astype(dt)
+        if cfg.pos_emb == "rope":
+            q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
+            k_new = layers.apply_rope(
+                k_new.swapaxes(1, 2), pos[:, None], cfg.rope_theta
+            ).swapaxes(1, 2)
+        new_cache = write_kv(cache, k_new, v_new, cfg, pos=pos)
+        k_cache, _ = read_kv(new_cache, dt)
+        qg = q.reshape(B, Hkv, H // Hkv, dh)
+        s = jnp.einsum("bgre,bsge->bgrs", qg.astype(jnp.float32),
+                       k_cache.astype(jnp.float32)).reshape(B, H, 1, Smax) * scale
+    else:
+        new_cache = write_x(cache, x_new, cfg, pos=pos)
+        x_cache = read_x(new_cache, dt)
+        s = compute_scores(mode, x_new, x_cache, score_weights(p), scale)
+        if cache.v is None:
+            v_all = jnp.einsum("bsd,dhe->bshe", x_cache, p["wv"].astype(dt))
+            if "bv" in p:
+                v_all = v_all + p["bv"][None, None].astype(dt)
+        if cache.v is not None:
+            v_new = jnp.einsum("bnd,dhe->bnhe", x_new, p["wv"].astype(dt))
+            if "bv" in p:
+                v_new = v_new + p["bv"][None, None].astype(dt)
+            new_cache = write_kv(new_cache, None, v_new, cfg, pos=pos)
+
+    if cfg.logit_softcap:
+        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+    idx = jnp.arange(Smax)[None, :]
+    ok = idx <= pos[:, None]
+    if window is not None:
+        ok = ok & (idx > pos[:, None] - window)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    a = jax.nn.softmax(s, axis=-1).astype(dt)
+
+    if mode == "standard" or cache.v is not None:
+        _, v_src = read_kv(new_cache, dt)
+    else:
+        v_src = v_all
+    ag = a.reshape(B, Hkv, H // Hkv, Smax)
+    o = jnp.einsum("bgrs,bsge->bgre", ag,
+                   v_src.astype(dt)).reshape(B, H, 1, dh)
+    return jnp.einsum("bhne,hed->bnd", o, p["wo"].astype(dt)), new_cache

@@ -1,0 +1,192 @@
+"""Flash attention with custom VJP — pure JAX (lax.scan over KV blocks).
+
+The portable twin of kernels/flash_scores (same online-softmax math) with
+a hand-written backward pass so TRAINING never materializes the (N × M)
+score matrix either: residuals are (q, k, v, out, lse) = O(N), and the
+backward recomputes score tiles blockwise exactly like the forward.
+
+Grouped layout serves both score modes:
+  * standard GQA:  q (B, Gs=Hkv, Rs=q_per_kv, N, E), k (B, Hkv, M, E)
+  * wqk (paper):   q = X·W_QK with Gs=1, Rs=H; k = raw X_kv stream —
+    one shared K-stream for every head (the weight-stationary dataflow).
+V keeps its own Hkv grouping: v (B, Hkv, M, dv), H = Gs·Rs = Hkv·Rv.
+
+Masking inputs are float arrays (positions, window, validity) so the
+custom_vjp treats them as primals with zero cotangent — this lets the
+per-layer window be a *traced* scalar (gemma's local:global scan).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import util
+
+NEG_INF = -1e30
+
+
+def _block_iter(x, nb, bm, axis=-2):
+    """(…, M, E) -> (nb, …, bm, E) scan-ready blocks along ``axis``."""
+    shape = x.shape
+    m_ax = x.ndim + axis if axis < 0 else axis
+    new = shape[:m_ax] + (nb, bm) + shape[m_ax + 1:]
+    return jnp.moveaxis(x.reshape(new), m_ax, 0)
+
+
+def _mask(pk_b, ok_b, pos_q, window, causal: bool, softcap, s):
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    ok = ok_b[None, :] > 0.5
+    if causal:
+        ok = ok & (pk_b[None, :] <= pos_q[:, None])
+    ok = ok & (pk_b[None, :] > pos_q[:, None] - window)
+    return jnp.where(ok, s, NEG_INF), ok
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11))
+def flash_attention(q, k, v, pos_q, pos_k, valid_k, window, softcap_arr,
+                    scale: float, causal: bool, softcap: float,
+                    block_m: int):
+    """-> out (B, H, N, dv) f32. See module docstring for layouts.
+
+    pos_q (N,), pos_k (M,), valid_k (M,), window (): all float32.
+    softcap_arr is unused ballast kept for signature stability.
+    """
+    out, _ = _forward(q, k, v, pos_q, pos_k, valid_k, window,
+                      scale, causal, softcap, block_m)
+    return out
+
+
+def _forward(q, k, v, pos_q, pos_k, valid_k, window,
+             scale, causal, softcap, block_m):
+    B, Gs, Rs, N, E = q.shape
+    Hkv, M, dv = v.shape[-3], v.shape[-2], v.shape[-1]
+    H = Gs * Rs
+    Rv = H // Hkv
+    bm = min(block_m, M)
+    pad = (-M) % bm
+    if pad:
+        k = jnp.pad(k, [(0, 0)] * (k.ndim - 2) + [(0, pad), (0, 0)])
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, pad), (0, 0)])
+        pos_k = jnp.pad(pos_k, (0, pad), constant_values=float(1 << 30))
+        valid_k = jnp.pad(valid_k, (0, pad))
+    nb = (M + pad) // bm
+    # bf16 operands + f32 accumulation: keeps gathered K/V blocks (and
+    # their backward counterparts) bf16 on the wire — measured ~2x on the
+    # flash share of collective bytes vs f32 operands (EXPERIMENTS §Perf)
+    xs = (_block_iter(k, nb, bm), _block_iter(v, nb, bm),
+          pos_k.reshape(nb, bm), valid_k.reshape(nb, bm))
+
+    def body(carry, blk):
+        acc, m, l = carry
+        k_b, v_b, pk_b, ok_b = blk
+        s = jnp.einsum("bgrne,bgme->bgrnm", q, k_b,
+                       preferred_element_type=jnp.float32) * scale
+        s, _ = _mask(pk_b, ok_b, pos_q, window, causal, softcap, s)
+        s = s.reshape(B, H, N, bm)
+        m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, -1, keepdims=True)
+        pv = jnp.einsum("bkrnm,bkmd->bkrnd",
+                        p.reshape(B, Hkv, Rv, N, bm).astype(v_b.dtype),
+                        v_b,
+                        preferred_element_type=jnp.float32
+                        ).reshape(B, H, N, dv)
+        return (acc * alpha + pv, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, N, dv), jnp.float32)
+    m0 = jnp.full((B, H, N, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, N, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), xs,
+                                  unroll=util.scan_unroll())
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l
+    lse = m[..., 0] + jnp.log(l[..., 0])                  # (B, H, N)
+    return out, lse
+
+
+def _fwd(q, k, v, pos_q, pos_k, valid_k, window, softcap_arr,
+         scale, causal, softcap, block_m):
+    out, lse = _forward(q, k, v, pos_q, pos_k, valid_k, window,
+                        scale, causal, softcap, block_m)
+    res = (q, k, v, pos_q, pos_k, valid_k, window, out, lse)
+    return out, res
+
+
+def _bwd(scale, causal, softcap, block_m, res, dout):
+    q, k, v, pos_q, pos_k, valid_k, window, out, lse = res
+    B, Gs, Rs, N, E = q.shape
+    Hkv, M, dv = v.shape[-3], v.shape[-2], v.shape[-1]
+    H = Gs * Rs
+    Rv = H // Hkv
+    bm = min(block_m, M)
+    pad = (-M) % bm
+    kp, vp, pkp, okp = k, v, pos_k, valid_k
+    if pad:
+        kp = jnp.pad(k, [(0, 0)] * (k.ndim - 2) + [(0, pad), (0, 0)])
+        vp = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, pad), (0, 0)])
+        pkp = jnp.pad(pos_k, (0, pad), constant_values=float(1 << 30))
+        okp = jnp.pad(valid_k, (0, pad))
+    nb = (M + pad) // bm
+    doutf = dout.astype(jnp.float32)
+    # D_i = sum_d dout * out  (per row)
+    Drow = jnp.sum(doutf * out, axis=-1, keepdims=True)   # (B,H,N,1)
+    xs = (_block_iter(kp, nb, bm), _block_iter(vp, nb, bm),
+          pkp.reshape(nb, bm), okp.reshape(nb, bm))
+
+    def body(dq_acc, blk):
+        k_b, v_b, pk_b, ok_b = blk
+        s_raw = jnp.einsum("bgrne,bgme->bgrnm", q, k_b,
+                           preferred_element_type=jnp.float32) * scale
+        s, _ = _mask(pk_b, ok_b, pos_q, window, causal, softcap, s_raw)
+        p = jnp.exp(s.reshape(B, H, N, bm) - lse[..., None])   # (B,H,N,bm)
+        pk_g = p.reshape(B, Hkv, Rv, N, bm)
+        dout_g = dout.reshape(B, Hkv, Rv, N, dv)
+        dv_b = jnp.einsum("bkrnm,bkrnd->bkmd", pk_g.astype(dout.dtype),
+                          dout_g, preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bkrnd,bkmd->bkrnm", dout_g, v_b,
+                        preferred_element_type=jnp.float32
+                        ).reshape(B, H, N, bm)
+        ds = p * (dp - Drow)                                   # (B,H,N,bm)
+        if softcap:
+            t = jnp.tanh(s_raw.reshape(B, H, N, bm) / softcap)
+            ds = ds * (1.0 - t * t)
+        ds = ds * scale
+        ds_g = ds.reshape(B, Gs, Rs, N, bm).astype(k_b.dtype)
+        dq_acc = dq_acc + jnp.einsum("bgrnm,bgme->bgrne", ds_g, k_b,
+                                     preferred_element_type=jnp.float32)
+        dk_b = jnp.einsum("bgrnm,bgrne->bgme", ds_g, q,
+                          preferred_element_type=jnp.float32)
+        # emit per-block dk/dv in the PARAM dtype: these cross the wire
+        # (all-reduce over the row-parallel shards) every block
+        return dq_acc, (dk_b.astype(k_b.dtype), dv_b.astype(v_b.dtype))
+
+    dq0 = jnp.zeros((B, Gs, Rs, N, E), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(body, dq0, xs,
+                                               unroll=util.scan_unroll())
+    dk = jnp.moveaxis(dk_blocks, 0, -3).reshape(B, Gs, M + pad, E)[..., :M, :]
+    dv = jnp.moveaxis(dv_blocks, 0, -3).reshape(B, Hkv, M + pad, dv)[..., :M, :]
+    z = lambda x: jnp.zeros_like(x)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            z(pos_q), z(pos_k), z(valid_k), z(window), z(window))
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def attend(q, k, v, pos_q, pos_k, *, scale, causal=True, window=None,
+           softcap=None, block_m=1024, valid_k=None) -> jax.Array:
+    """Convenience wrapper: int positions / optional window / bool valid.
+    Returns (B, H, N, dv) f32."""
+    M = k.shape[-2]
+    win = jnp.asarray(window if window is not None else (1 << 30),
+                      jnp.float32)
+    vk = (jnp.ones((M,), jnp.float32) if valid_k is None
+          else valid_k.astype(jnp.float32))
+    return flash_attention(
+        q, k, v, pos_q.astype(jnp.float32), pos_k.astype(jnp.float32),
+        vk, win, win, scale, causal, float(softcap or 0.0), block_m)

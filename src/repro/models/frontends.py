@@ -1,0 +1,40 @@
+"""STUB modality frontends (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; ``input_specs()`` provides
+precomputed frame/patch embeddings).
+
+These produce deterministic synthetic embeddings with the right shapes —
+whisper log-mel frames after the conv downsampler (2x), pixtral ViT patch
+embeddings — so examples/tests exercise the backbone without audio/vision
+deps. The real frontends would slot in behind the same two functions.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def audio_frames(batch: int, n_frames: int, d_model: int,
+                 seed: int = 0) -> np.ndarray:
+    """Whisper encoder inputs: (B, n_frames, D) pseudo log-mel features
+    after the conv1d stride-2 frontend (n_frames = n_mel_frames // 2)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 7001]))
+    t = np.linspace(0, 1, n_frames)[None, :, None]
+    base = np.sin(2 * np.pi * (3 + np.arange(d_model)[None, None, :] % 7) * t)
+    noise = rng.standard_normal((batch, n_frames, d_model)) * 0.1
+    return (0.3 * base + noise).astype(np.float32)
+
+
+def vision_patches(batch: int, n_patches: int, d_model: int,
+                   seed: int = 0) -> np.ndarray:
+    """Pixtral-ViT patch embeddings: (B, n_patches, D) with a smooth 2-D
+    spatial structure (patches of a synthetic image)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 7002]))
+    side = int(np.sqrt(n_patches))
+    yy, xx = np.mgrid[0:side, 0:side] / max(side - 1, 1)
+    grid = np.stack([yy.ravel(), xx.ravel()], -1)          # (P, 2)
+    freqs = rng.standard_normal((2, d_model)) * 2.0
+    base = np.sin(grid @ freqs)[None]                       # (1, P, D)
+    if side * side < n_patches:
+        pad = np.zeros((1, n_patches - side * side, d_model))
+        base = np.concatenate([base, pad], axis=1)
+    noise = rng.standard_normal((batch, n_patches, d_model)) * 0.1
+    return (0.5 * base + noise).astype(np.float32)

@@ -1,0 +1,218 @@
+"""Mamba2 block: SSD (state-space duality) in chunked matmul form.
+
+The SSD scan is restructured into chunk-local quadratic attention-like
+einsums plus an inter-chunk linear recurrence — MXU-friendly (the TPU
+adaptation: chunk length is the VMEM/MXU tile knob, default 256).
+
+Block:  x -(in_proj)-> [z | xc | B | C | dt]; causal depthwise conv+silu on
+[xc,B,C]; SSD over heads (P=head_dim, N=state_dim, G=1 group); gated
+RMSNorm by z; out_proj. A is scalar-per-head (Mamba2), D is a skip gain.
+
+Decode keeps (conv_state (B, W-1, conv_dim), ssm_state (B, H, P, N)).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import util
+from repro.configs.base import SSMConfig
+from repro.models import layers
+
+
+def dims(d_model: int, scfg: SSMConfig):
+    di = scfg.expand * d_model
+    nh = di // scfg.head_dim
+    conv_dim = di + 2 * scfg.state_dim
+    return di, nh, conv_dim
+
+
+def init_ssm(rng, d_model: int, scfg: SSMConfig, dtype) -> dict:
+    di, nh, conv_dim = dims(d_model, scfg)
+    N = scfg.state_dim
+    ks = jax.random.split(rng, 5)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        # in_proj -> [z(di) | x(di) | B(N) | C(N) | dt(nh)]
+        "in_proj": jax.random.normal(ks[0], (d_model, 2 * di + 2 * N + nh),
+                                     dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (scfg.conv_width, conv_dim),
+                                    dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": jax.random.normal(ks[3], (di, d_model), dtype)
+                    * (1.0 / math.sqrt(di)),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j<t<=i} a[..., t]
+    (lower-triangular), -inf above the diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _split_proj(p, u, d_model, scfg):
+    di, nh, _ = dims(d_model, scfg)
+    N = scfg.state_dim
+    zxbcdt = jnp.einsum("...d,de->...e", u, p["in_proj"].astype(u.dtype))
+    z = zxbcdt[..., :di]
+    xc = zxbcdt[..., di:2 * di]
+    Bc = zxbcdt[..., 2 * di:2 * di + N]
+    Cc = zxbcdt[..., 2 * di + N:2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:]
+    return z, xc, Bc, Cc, dt
+
+
+def ssd_chunked(x: jax.Array, a_dt: jax.Array, B: jax.Array, C: jax.Array,
+                chunk: int, init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x (b, l, h, p): dt-scaled inputs; a_dt (b, l, h): log-decay per step
+    (= A*dt, negative); B, C (b, l, n) shared across heads (G=1).
+    Returns (y (b, l, h, p), final_state (b, h, p, n)).
+    """
+    b, l, h, pdim = x.shape
+    n = B.shape[-1]
+    q = min(chunk, l)
+    while l % q:
+        q //= 2
+    c = l // q
+    xr = x.reshape(b, c, q, h, pdim)
+    ar = a_dt.reshape(b, c, q, h).transpose(0, 3, 1, 2)   # (b,h,c,q)
+    Br = B.reshape(b, c, q, n)
+    Cr = C.reshape(b, c, q, n)
+
+    a_cum = jnp.cumsum(ar, axis=-1)                       # (b,h,c,q)
+    L = jnp.exp(_segsum(ar))                              # (b,h,c,q,q)
+    # intra-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bcin,bcjn,bhcij,bcjhp->bcihp", Cr, Br, L, xr)
+
+    # per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)       # (b,h,c,q)
+    states = jnp.einsum("bcjn,bhcj,bcjhp->bchpn", Br, decay_states, xr)
+
+    # inter-chunk recurrence h_{c} = exp(sum a_c) h_{c-1} + states_c
+    # (recurrence kept in f32 for stability and uniform scan carry dtype)
+    chunk_decay = jnp.exp(a_cum[..., -1])                 # (b,h,c)
+    states = states.astype(jnp.float32)
+    s0 = (jnp.zeros((b, h, pdim, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                     # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                 # emit state BEFORE chunk
+
+    sts = states.transpose(1, 0, 2, 3, 4)                 # (c,b,h,p,n)
+    decs = chunk_decay.transpose(2, 0, 1)                 # (c,b,h)
+    final, prev_states = jax.lax.scan(step, s0, (sts, decs),
+                                      unroll=util.scan_unroll())
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (b,c,h,p,n)
+
+    # inter-chunk contribution
+    state_decay_out = jnp.exp(a_cum)                      # (b,h,c,q)
+    y_off = jnp.einsum("bcin,bchpn,bhci->bcihp", Cr, prev_states,
+                       state_decay_out)
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, l, h, pdim)
+    return y.astype(x.dtype), final
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, W-1, conv_dim)
+    ssm: jax.Array    # (B, H, P, N)
+
+
+def init_ssm_state(cfg_d: int, scfg: SSMConfig, batch: int, dtype) -> SSMState:
+    di, nh, conv_dim = dims(cfg_d, scfg)
+    return SSMState(conv=jnp.zeros((batch, scfg.conv_width - 1, conv_dim), dtype),
+                    ssm=jnp.zeros((batch, nh, scfg.head_dim, scfg.state_dim),
+                                  jnp.float32))
+
+
+def mamba_block(p: dict, u: jax.Array, d_model: int, scfg: SSMConfig,
+                init_state: Optional[SSMState] = None,
+                return_state: bool = False):
+    """Full Mamba2 block over a sequence. u (B, L, D) -> (B, L, D)."""
+    di, nh, conv_dim = dims(d_model, scfg)
+    z, xc, Bc, Cc, dt = _split_proj(p, u, d_model, scfg)
+    xbc = jnp.concatenate([xc, Bc, Cc], axis=-1)          # (B, L, conv_dim)
+
+    # causal depthwise conv (width W): pad left W-1 (or carry conv state)
+    W = scfg.conv_width
+    if init_state is not None:
+        pad = init_state.conv.astype(xbc.dtype)
+    else:
+        pad = jnp.zeros(xbc.shape[:-2] + (W - 1, conv_dim), xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=-2)
+    conv = sum(xp[..., i:xp.shape[-2] - (W - 1 - i), :]
+               * p["conv_w"][i].astype(xbc.dtype) for i in range(W))
+    conv = jax.nn.silu((conv + p["conv_b"].astype(xbc.dtype))
+                       .astype(jnp.float32)).astype(xbc.dtype)
+    xc2 = conv[..., :di]
+    Bc2 = conv[..., di:di + scfg.state_dim]
+    Cc2 = conv[..., di + scfg.state_dim:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,L,nh)
+    A = -jnp.exp(p["A_log"])                                      # (nh,)
+    xh = xc2.reshape(xc2.shape[:-1] + (nh, scfg.head_dim))
+    if scfg.shard_heads:
+        from repro.sharding import act
+        xh = act.constrain_ssm_heads(xh)  # TP over SSM heads (see act.py)
+    x_dt = xh * dt[..., None].astype(xh.dtype)
+    a_dt = A * dt                                                 # (B,L,nh)
+
+    y, fin = ssd_chunked(x_dt, a_dt, Bc2.astype(jnp.float32),
+                         Cc2.astype(jnp.float32), scfg.chunk,
+                         init_state.ssm if init_state is not None else None)
+    y = y + xh * p["D"][:, None].astype(xh.dtype)
+    y = y.reshape(y.shape[:-2] + (di,))
+    y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       p["norm_scale"])
+    out = jnp.einsum("...e,ed->...d", y, p["out_proj"].astype(u.dtype))
+    if return_state:
+        new_conv = xp[..., xp.shape[-2] - (W - 1):, :]
+        return out, SSMState(conv=new_conv, ssm=fin.astype(jnp.float32))
+    return out
+
+
+def mamba_decode_step(p: dict, u: jax.Array, state: SSMState, d_model: int,
+                      scfg: SSMConfig) -> Tuple[jax.Array, SSMState]:
+    """One-token recurrent step. u (B, 1, D)."""
+    di, nh, conv_dim = dims(d_model, scfg)
+    N, P, W = scfg.state_dim, scfg.head_dim, scfg.conv_width
+    z, xc, Bc, Cc, dt = _split_proj(p, u[:, 0, :], d_model, scfg)
+    xbc = jnp.concatenate([xc, Bc, Cc], axis=-1)          # (B, conv_dim)
+
+    win = jnp.concatenate([state.conv.astype(xbc.dtype), xbc[:, None, :]],
+                          axis=1)                          # (B, W, conv_dim)
+    conv = jnp.einsum("bwc,wc->bc", win, p["conv_w"].astype(xbc.dtype))
+    conv = jax.nn.silu((conv + p["conv_b"].astype(xbc.dtype))
+                       .astype(jnp.float32)).astype(xbc.dtype)
+    xc2, Bc2, Cc2 = conv[:, :di], conv[:, di:di + N], conv[:, di + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(A * dt)                                         # (B,nh)
+    xh = xc2.reshape(-1, nh, P).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bc2.astype(jnp.float32), xh)
+    new_ssm = state.ssm * dec[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cc2.astype(jnp.float32))
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(-1, di).astype(u.dtype)
+    y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       p["norm_scale"])
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"].astype(u.dtype))
+    return out[:, None, :], SSMState(conv=win[:, 1:, :].astype(state.conv.dtype),
+                                     ssm=new_ssm)

@@ -1,0 +1,227 @@
+"""Decoder / encoder / hybrid stacks with ``lax.scan`` over layers.
+
+All per-layer params are stacked on a leading axis so one HLO layer body
+serves every depth (keeps 512-device SPMD compiles fast). Heterogeneous
+patterns:
+  * gemma3 local:global — same params; per-layer (window, rope theta)
+    passed as scanned arrays, so no lax.cond branches.
+  * jamba 1:7 attn:mamba with alternating MoE/dense FFN — scan over
+    blocks of 8 with a statically unrolled block body.
+Remat (``cfg.remat``): "block" checkpoints each scan body.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers, moe, ssm
+from repro import util
+from repro.sharding import act
+
+BIG_WINDOW = 1 << 30
+
+
+def _ckpt(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        # saves big FFN/attention dot outputs: fastest backward but
+        # ~2 GB/layer live at 14B scale — needs generous HBM headroom
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    # "block"/"full": save only the layer carry, recompute the body in
+    # backward — the 16 GB-HBM-fitting default at these model sizes
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+# ----------------------------------------------------------- uniform stacks
+
+def init_uniform_stack(rng, cfg, dtype, n_layers: int, cross: bool = False):
+    """Stacked params for a uniform attention stack (dense or MoE FFN)."""
+    def one(r):
+        ks = jax.random.split(r, 6)
+        p = {"ln1": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+             "attn": attn.init_attention(ks[0], cfg, dtype),
+             "ln2": layers.init_norm(cfg.norm, cfg.d_model, dtype)}
+        if cross:
+            p["lnx"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+            p["xattn"] = attn.init_attention(ks[1], cfg, dtype, cross=True)
+        if cfg.moe is not None and cfg.moe.every_n_layers == 1:
+            p["moe"] = moe.init_moe(ks[2], cfg.d_model, cfg.moe, cfg.act, dtype)
+        else:
+            p["mlp"] = layers.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act,
+                                       dtype, bias=(cfg.norm == "layernorm"))
+        return p
+    return jax.vmap(one)(jax.random.split(rng, n_layers))
+
+
+def _layer_windows(cfg, n_layers: int):
+    """(window (L,), theta (L,)) arrays for local:global / SWA patterns."""
+    if cfg.local_global_ratio is not None:
+        is_g = jnp.array([cfg.is_global_attn(i) for i in range(n_layers)])
+        window = jnp.where(is_g, BIG_WINDOW, cfg.local_window)
+        theta = jnp.where(is_g, cfg.rope_theta, 10_000.0)
+    elif cfg.sliding_window:
+        window = jnp.full((n_layers,), cfg.sliding_window)
+        theta = jnp.full((n_layers,), cfg.rope_theta)
+    else:
+        window = jnp.full((n_layers,), BIG_WINDOW)
+        theta = jnp.full((n_layers,), cfg.rope_theta)
+    return window, theta
+
+
+def uniform_stack(params, x: jax.Array, cfg, *, positions: jax.Array,
+                  mask_kind: str = "causal",
+                  enc_out: Optional[jax.Array] = None,
+                  enc_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Run the stacked layers over x (B, N, D)."""
+    n_layers = jax.tree_util.tree_leaves(params)[0].shape[0]
+    window, theta = _layer_windows(cfg, n_layers)
+
+    def body(h, xs):
+        p, win, th = xs
+        hn = layers.norm(h, p["ln1"], cfg.norm)
+        a = attn.attention_full(
+            p["attn"], hn, hn, _with_theta(cfg, th), positions_q=positions,
+            positions_kv=positions, mask_kind=mask_kind, window=win)
+        h = h + a
+        if enc_out is not None and "xattn" in p:
+            hx = layers.norm(h, p["lnx"], cfg.norm)
+            xa = attn.attention_full(
+                p["xattn"], hx, enc_out, _with_theta(cfg, th),
+                positions_q=positions, positions_kv=enc_positions,
+                mask_kind="none", score_mode=cfg.score_mode)
+            h = h + xa
+        hn2 = layers.norm(h, p["ln2"], cfg.norm)
+        if "moe" in p:
+            f, _ = moe.moe_ffn(p["moe"], hn2, cfg.moe, cfg.act)
+        else:
+            f = layers.mlp(hn2, p["mlp"], cfg.act)
+        return act.constrain_tokens(h + f), None
+
+    body = _ckpt(body, cfg)
+    h, _ = jax.lax.scan(body, act.constrain_tokens(x),
+                        (params, window, theta), unroll=util.scan_unroll())
+    return h
+
+
+def _with_theta(cfg, theta):
+    """Thread a (possibly traced) per-layer rope theta through attention.
+
+    ``attention_full`` reads cfg.rope_theta only inside apply_rope, which
+    accepts traced values; dataclasses.replace on a traced field is not
+    allowed, so we use a tiny proxy object."""
+    class _Proxy:
+        __slots__ = ("_cfg", "rope_theta")
+        def __init__(self, c, t):
+            object.__setattr__(self, "_cfg", c)
+            object.__setattr__(self, "rope_theta", t)
+        def __getattr__(self, k):
+            return getattr(object.__getattribute__(self, "_cfg"), k)
+    return _Proxy(cfg, theta)
+
+
+# ------------------------------------------------------------ hybrid blocks
+
+def init_hybrid_block_stack(rng, cfg, dtype):
+    """jamba: blocks of `attn_every` layers; index 0 attention, rest mamba;
+    FFN alternates dense (even in-block idx) / MoE (odd)."""
+    per = cfg.attn_every
+    n_blocks = cfg.num_layers // per
+    n_mamba = per - 1
+    n_moe = per // 2
+    n_dense = per - n_moe
+
+    def one(r):
+        ks = jax.random.split(r, 8)
+        return {
+            "attn_ln": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": attn.init_attention(ks[0], cfg, dtype),
+            "mamba_ln": jax.vmap(lambda k: layers.init_norm(
+                cfg.norm, cfg.d_model, dtype))(jax.random.split(ks[1], n_mamba)),
+            "mamba": jax.vmap(lambda k: ssm.init_ssm(
+                k, cfg.d_model, cfg.ssm, dtype))(jax.random.split(ks[2], n_mamba)),
+            "ffn_ln": jax.vmap(lambda k: layers.init_norm(
+                cfg.norm, cfg.d_model, dtype))(jax.random.split(ks[3], per)),
+            "mlp": jax.vmap(lambda k: layers.init_mlp(
+                k, cfg.d_model, cfg.d_ff, cfg.act, dtype))(
+                jax.random.split(ks[4], n_dense)),
+            "moe": jax.vmap(lambda k: moe.init_moe(
+                k, cfg.d_model, cfg.moe, cfg.act, dtype))(
+                jax.random.split(ks[5], n_moe)),
+        }
+    return jax.vmap(one)(jax.random.split(rng, n_blocks))
+
+
+def hybrid_stack(params, x: jax.Array, cfg, *, positions: jax.Array) -> jax.Array:
+    per = cfg.attn_every
+    take = lambda t, i: jax.tree_util.tree_map(lambda a: a[i], t)
+    # inner remat: the checkpoint unit is the whole `per`-layer block, so
+    # without per-sublayer checkpoints the backward recompute holds all 7
+    # mamba layers' SSD transients simultaneously (87 GiB/dev at jamba
+    # scale); per-sublayer checkpointing keeps one sublayer live at a time
+    inner = (lambda f: jax.checkpoint(
+        f, policy=jax.checkpoint_policies.nothing_saveable)) \
+        if cfg.remat != "none" else (lambda f: f)
+
+    def body(h, p):
+        i_mamba = i_dense = i_moe = 0
+        for pos_in_block in range(per):
+            if pos_in_block == 0:
+                def attn_fn(hh, pp):
+                    hn = layers.norm(hh, pp["attn_ln"], cfg.norm)
+                    return hh + attn.attention_full(
+                        pp["attn"], hn, hn, cfg, positions_q=positions,
+                        positions_kv=positions, mask_kind="causal")
+                h = inner(attn_fn)(h, p)
+            else:
+                def mamba_fn(hh, pl, pm):
+                    hn = layers.norm(hh, pl, cfg.norm)
+                    return hh + ssm.mamba_block(pm, hn, cfg.d_model, cfg.ssm)
+                h = inner(mamba_fn)(h, take(p["mamba_ln"], i_mamba),
+                                    take(p["mamba"], i_mamba))
+                i_mamba += 1
+            pfl = take(p["ffn_ln"], pos_in_block)
+            if pos_in_block % 2 == 1:                     # MoE on odd
+                def ffn_fn(hh, pfl_, pm_):
+                    hn2 = layers.norm(hh, pfl_, cfg.norm)
+                    f, _ = moe.moe_ffn(pm_, hn2, cfg.moe, cfg.act)
+                    return hh + f
+                h = inner(ffn_fn)(h, pfl, take(p["moe"], i_moe))
+                i_moe += 1
+            else:
+                def ffn_fn(hh, pfl_, pm_):
+                    hn2 = layers.norm(hh, pfl_, cfg.norm)
+                    return hh + layers.mlp(hn2, pm_, cfg.act)
+                h = inner(ffn_fn)(h, pfl, take(p["mlp"], i_dense))
+                i_dense += 1
+        return act.constrain_tokens(h), None
+
+    body = _ckpt(body, cfg)
+    h, _ = jax.lax.scan(body, act.constrain_tokens(x), params,
+                        unroll=util.scan_unroll())
+    return h
+
+
+# --------------------------------------------------------------- ssm stacks
+
+def init_ssm_stack(rng, cfg, dtype):
+    def one(r):
+        return {"ln": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+                "mamba": ssm.init_ssm(r, cfg.d_model, cfg.ssm, dtype)}
+    return jax.vmap(one)(jax.random.split(rng, cfg.num_layers))
+
+
+def ssm_stack(params, x: jax.Array, cfg) -> jax.Array:
+    def body(h, p):
+        hn = layers.norm(h, p["ln"], cfg.norm)
+        h = h + ssm.mamba_block(p["mamba"], hn, cfg.d_model, cfg.ssm)
+        return act.constrain_tokens(h), None
+    body = _ckpt(body, cfg)
+    h, _ = jax.lax.scan(body, act.constrain_tokens(x), params,
+                        unroll=util.scan_unroll())
+    return h

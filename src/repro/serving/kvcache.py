@@ -1,0 +1,78 @@
+"""Decode-cache management + the paper-derived X-cache accounting.
+
+The cache *tensors* live in models/attention.py (KVCache with k/v/x
+fields, selected by ``cache_mode_for(cfg)``). This module owns what the
+serving engine needs around them:
+
+  * **bytes-per-token accounting** for each cache mode — the quantity the
+    paper's weight-stationary dataflow optimizes. Standard KV caching
+    stores 2·Hkv·dh values/token/layer; the paper's reformulation scores
+    straight from raw X, so an X-cache stores D values/token/layer shared
+    by *all* heads (and serves the V-recompute in pure-x mode). The
+    engine uses this to pick max concurrent slots for an HBM budget.
+  * **slot reset** — zeroing one batch slot of a stacked cache pytree for
+    continuous batching (evict finished, admit new).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheBudget:
+    mode: str                 # kv | xv | x
+    bytes_per_token_layer: int
+    layers: int
+    dtype_bytes: int = 2
+
+    @property
+    def bytes_per_token(self) -> int:
+        return self.bytes_per_token_layer * self.layers
+
+    def max_tokens(self, hbm_bytes: int) -> int:
+        return hbm_bytes // max(self.bytes_per_token, 1)
+
+
+def budget_for(cfg, dtype_bytes: int = 2) -> CacheBudget:
+    """Per-token cache bytes for cfg's cache mode (attention layers)."""
+    from repro.models.attention import cache_mode_for
+    mode = cache_mode_for(cfg)
+    kv_row = 2 * cfg.num_kv_heads * cfg.head_dim
+    x_row = cfg.d_model
+    per_layer = {"kv": kv_row, "xv": x_row + kv_row // 2, "x": x_row}[mode]
+    n_attn = len(cfg.attn_layer_indices) if cfg.num_heads else 0
+    return CacheBudget(mode=mode,
+                       bytes_per_token_layer=per_layer * dtype_bytes,
+                       layers=max(n_attn, 1), dtype_bytes=dtype_bytes)
+
+
+def compare_modes(cfg, dtype_bytes: int = 2) -> Dict[str, int]:
+    """bytes/token/layer of every mode — the DESIGN.md §4 crossover:
+    pure-x wins iff D < 2·Hkv·dh (whisper: 384 < 768 ✓)."""
+    kv_row = 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+    x_row = cfg.d_model * dtype_bytes
+    v_row = cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+    return {"kv": kv_row, "x": x_row, "xv": x_row + v_row}
+
+
+def reset_slot(cache, slot: int):
+    """Zero batch-slot ``slot`` across a stacked cache pytree. Cache
+    leaves are (L, B, ...) or (B, ...); we zero index ``slot`` on the
+    batch axis (detected as the axis after any leading layer axes of
+    equal extent across leaves is fragile — instead: the engine stores
+    the batch axis per leaf at build time)."""
+    def one(leaf, baxis):
+        idx = [slice(None)] * leaf.ndim
+        idx[baxis] = slot
+        return leaf.at[tuple(idx)].set(jnp.zeros((), leaf.dtype))
+    return jax.tree_util.tree_map(lambda l: one(l, _batch_axis(l)), cache)
+
+
+def _batch_axis(leaf) -> int:
+    # model.init_cache builds leaves as (L, B, ...) via _stack_pytrees,
+    # except enc_len (B,). Heuristic consistent with that construction.
+    return 0 if leaf.ndim <= 1 else 1

@@ -1,0 +1,138 @@
+"""Activation sharding constraints (Megatron-style sequence parallelism).
+
+The layer-stack scan carry h (B, S, D) is the dominant live activation
+under remat: per layer it is saved for the backward pass. Constraining
+it to P(batch_axes, "model", None) shards the sequence dim over the TP
+axis between layers — GSPMD inserts the all-gather at attention/FFN
+entry and the reduce-scatter after, exactly Megatron SP — cutting the
+carry (and every saved residual) by the TP degree.
+
+Constraints are applied only when a mesh is installed via ``use_mesh``
+(the dry-run launcher and the sharded trainer do this at trace time);
+host/CI runs trace with no mesh and the helpers are identity.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH_STACK = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    _MESH_STACK.append(mesh)
+    try:
+        yield
+    finally:
+        _MESH_STACK.pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+def _batch_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _apply(x, spec_fn):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = spec_fn(mesh, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_tokens(x):
+    """h (B, S, D): batch over (pod,data), sequence over model (SP)."""
+    def spec(mesh, shape):
+        if len(shape) != 3:
+            return None
+        b = _batch_axes(mesh)
+        ax0 = b if shape[0] % _size(mesh, b) == 0 else None
+        ax1 = "model" if shape[1] % mesh.shape["model"] == 0 and \
+            shape[1] >= mesh.shape["model"] else None
+        return P(ax0, ax1)
+    return _apply(x, spec)
+
+
+def constrain_batch_only(x):
+    """(B, ...): batch over (pod,data), rest replicated."""
+    def spec(mesh, shape):
+        b = _batch_axes(mesh)
+        if not shape or shape[0] % _size(mesh, b) != 0:
+            return None
+        return P(b)
+    return _apply(x, spec)
+
+
+def constrain_ssm_heads(x):
+    """SSD per-head tensors (B, L, H, P): shard SSM heads over model.
+    The chunked SSD's intra-chunk L tensor is (B, H, C, Q, Q) — at
+    jamba scale (H=256, Q=256) it is ~17 GB/layer unsharded; H-sharding
+    divides it by the TP degree (jamba/mamba2 H always divides 16)."""
+    def spec(mesh, shape):
+        if len(shape) != 4:
+            return None
+        b = _batch_axes(mesh)
+        ax0 = b if shape[0] % _size(mesh, b) == 0 else None
+        axH = "model" if shape[2] % mesh.shape["model"] == 0 and \
+            shape[2] >= mesh.shape["model"] else None
+        return P(ax0, None, axH)
+    return _apply(x, spec)
+
+
+def constrain_moe_dispatched(x):
+    """MoE dispatched activations (G, E, C, D) [or (G, g, E, C)]: pin the
+    expert axis to the model mesh axis (expert parallelism). Without this
+    GSPMD may instead ALL-GATHER the expert weights over the model axis —
+    at jamba scale that is ~19 GB of gathered expert matrices per MoE
+    layer per chip."""
+    def spec(mesh, shape):
+        if len(shape) != 4:
+            return None
+        msz = mesh.shape["model"]
+        out = [None] * 4
+        # expert axis: dim 1 for (G,E,C,D) [E=num_experts], dim 2 for
+        # (G,g,E,C) dispatch masks; pick the first dim (1 or 2) divisible
+        for i in (1, 2):
+            if shape[i] % msz == 0 and shape[i] >= msz:
+                out[i] = "model"
+                break
+        if out[1] is None and out[2] is None:
+            return None
+        return P(*out)
+    return _apply(x, spec)
+
+
+def constrain_grouped_q(x):
+    """Grouped attention q (B, G, R, N, E): batch over (pod,data), q-ROW
+    dim N over model. Row-parallel attention is head-count agnostic —
+    it balances the score/AV compute and the flash working set across
+    the TP axis even when neither H nor Hkv divides it (qwen2.5's 40
+    heads, whisper's 6). K/V stay replicated over model (the Megatron-SP
+    all-gather), which GSPMD inserts from the S-sharded layer carry."""
+    def spec(mesh, shape):
+        if len(shape) != 5:
+            return None
+        b = _batch_axes(mesh)
+        ax0 = b if shape[0] % _size(mesh, b) == 0 else None
+        axN = "model" if shape[3] % mesh.shape["model"] == 0 and \
+            shape[3] >= mesh.shape["model"] else None
+        return P(ax0, None, None, axN)
+    return _apply(x, spec)

@@ -1,0 +1,192 @@
+"""PartitionSpec rules: FSDP x TP x EP x SP with divisibility fallback.
+
+``spec_for(path, shape, mesh)`` matches the param path against ordered
+rules; every proposed sharded dim is divisibility-checked against the mesh
+axis size and silently dropped to replication when it doesn't divide
+(e.g. 8 kv-heads on a 16-way model axis, mixtral's 8 experts). This is
+what makes the same rules elastic across mesh shapes — re-materialize on
+any mesh that divides and the model still compiles (tested in
+tests/test_sharding.py for 4 mesh shapes).
+
+Conventions: stacked layer axes lead and stay unsharded; "data" is the
+FSDP axis; "model" is TP/EP; the batch shards over ("pod","data").
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex over '/'-joined path, ORDERED fallback spec templates applied to
+# the TRAILING dims). Leading dims (layer stacks, block stacks) replicate.
+# The first template whose every named axis divides the dim wins; if none
+# fits fully, the first template is taken with non-dividing axes dropped.
+# This is the divisibility-with-fallback mechanism: e.g. qwen2.5's 40
+# query heads don't divide a 16-way model axis, so wq falls back from
+# head-sharding to head-DIM sharding (128 % 16 == 0); whisper's odd 51865
+# vocab drops the vocab axis and keeps the d_model FSDP axis.
+_RULES: Sequence[Tuple[str, Tuple[Tuple, ...]]] = (
+    # embeddings / heads
+    (r"embed$",            (("model", "data"), (None, "data"))),   # (V, D)
+    (r"lm_head$",          (("data", "model"), ("data", None))),   # (D, V)
+    (r"(dec_pos|enc_pos)$", ((None, "model"), (None, "data"))),    # (P, D)
+    # attention: heads over model; fallback head_dim over model
+    (r"attn/wq$",          (("data", "model", None), ("data", None, "model"))),
+    (r"attn/w[kv]$",       (("data", "model", None), ("data", None, "model"))),
+    (r"attn/wo$",          (("model", None, "data"), (None, "model", "data"))),
+    (r"attn/wqk$",         (("model", None, None), (None, "data", "model"))),
+    (r"attn/b[qkv]$",      (("model", None), (None, "model"))),
+    # dense mlp
+    (r"mlp/w_(gate|up)$",  (("data", "model"),)),                  # (D, F)
+    (r"mlp/w_down$",       (("model", "data"),)),                  # (F, D)
+    (r"mlp/b_",            ((None,),)),
+    # moe: experts over model; fallback TP over expert ff (mixtral 8e/16)
+    (r"moe/router$",       (("data", None),)),                     # (D, E)
+    (r"moe/w_(gate|up)$",  (("model", "data", None), (None, "data", "model"))),
+    (r"moe/w_down$",       (("model", None, "data"), (None, "model", "data"))),
+    # mamba
+    (r"mamba/in_proj$",    (("data", "model"),)),      # (D, 2di+2N+nh)
+    (r"mamba/out_proj$",   (("model", "data"),)),      # (di, D)
+    (r"mamba/conv_w$",     ((None, "model"),)),        # (W, conv_dim)
+    (r"mamba/conv_b$",     (("model",),)),
+    (r"mamba/(A_log|dt_bias|D)$", ((None,),)),
+    (r"mamba/norm_scale$", (("model",),)),
+    # norms & leftovers
+    (r"(ln|norm|_ln)",     ((None,),)),
+    (r".*",                ((None,),)),
+)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _divides(template: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> bool:
+    n_lead = len(shape) - len(template)
+    for dim, axis in zip(shape[n_lead:], template):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            return False
+    return True
+
+
+def _fit(template: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Pad template to rank (leading None) and drop non-dividing axes
+    (pjit argument shardings must divide exactly)."""
+    n_lead = len(shape) - len(template)
+    spec = [None] * n_lead + list(template)
+    out = []
+    for dim, axis in zip(shape, spec):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            axis = None
+        out.append(axis)
+    # trim trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    for pat, templates in _RULES:
+        if re.search(pat, path):
+            for t in templates:
+                if len(t) <= len(shape) and _divides(t, shape, mesh):
+                    return _fit(t, shape, mesh)
+            return _fit(templates[0], shape, mesh)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_shardings(params_tree, mesh: Mesh):
+    """Pytree of NamedSharding mirroring params (works on ShapeDtypeStruct
+    trees — no allocation)."""
+    def one(path, leaf):
+        return NamedSharding(mesh, spec_for(_path_str(path), leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return P(axes)
+
+
+def data_shardings(batch_tree, mesh: Mesh, seq_shard: bool = False):
+    """Shardings for a data batch: leading batch dim over (pod,data);
+    if the batch dim doesn't divide (long-context bs=1), shard the
+    sequence dim instead (SP) when seq_shard."""
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    bsz = 1
+    for a in baxes:
+        bsz *= mesh.shape[a]
+
+    def one(leaf):
+        shape = leaf.shape
+        if not shape:
+            return NamedSharding(mesh, P())
+        if shape[0] % bsz == 0 and shape[0] >= bsz:
+            return NamedSharding(mesh, P(baxes))
+        if seq_shard and len(shape) >= 2 and shape[1] % mesh.shape["data"] == 0:
+            return NamedSharding(mesh, P(None, "data"))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, batch: int):
+    """Decode-cache shardings.
+
+    KV/X caches are (L, B, S, ...): shard B over (pod,data) when it
+    divides, else shard S over "data" (sequence parallelism for the
+    bs=1 long-context cell). Head/feature dims shard over "model" when
+    they divide. SSM states (L, B, H, P, N): B over data, H over model.
+    """
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    bsz = 1
+    for a in baxes:
+        bsz *= mesh.shape[a]
+    msz = mesh.shape["model"]
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        # find batch dim: first dim equal to `batch`
+        try:
+            bdim = shape.index(batch)
+        except ValueError:
+            bdim = None
+        if bdim is not None and batch % bsz == 0:
+            spec[bdim] = baxes
+        elif bdim is not None and len(shape) > bdim + 1 \
+                and shape[bdim + 1] % mesh.shape["data"] == 0 \
+                and shape[bdim + 1] >= 4096:
+            spec[bdim + 1] = "data"          # sequence-sharded cache (SP)
+        # shard a trailing head-like dim over model if divisible
+        for i in range(len(shape) - 1, max(len(shape) - 3, 0), -1):
+            if spec[i] is None and i != bdim and shape[i] % msz == 0 \
+                    and shape[i] >= msz:
+                spec[i] = "model"
+                break
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, cache_tree)

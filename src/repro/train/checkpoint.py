@@ -1,0 +1,140 @@
+"""Sharded checkpointing: per-leaf .npy files + JSON manifest, written
+atomically (two-phase: tmp dir -> fsync -> rename) so a crash mid-save
+never corrupts the latest checkpoint. No orbax dependency.
+
+Layout:
+    <dir>/step_000123/
+        manifest.json        # tree structure, shapes, dtypes, step, extras
+        leaf_00000.npy ...   # row-major leaf order of the flattened tree
+    <dir>/LATEST             # text file naming the newest *complete* step
+
+Restore is sharding-aware: leaves are loaded host-side and re-placed with
+``jax.device_put(x, sharding)`` when shardings are given, so a checkpoint
+written on one mesh restores onto any other mesh whose shardings divide
+(elastic restart, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+import numpy as np
+
+# numpy can't round-trip ml_dtypes (bfloat16, float8_*) through .npy —
+# store them as raw unsigned views and re-view on load via the manifest.
+_RAW_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32}
+
+
+def _savable(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.kind in "biufc" and not arr.dtype.name.startswith(
+            ("bfloat", "float8", "float4", "int4", "uint4")):
+        return arr
+    return arr.view(_RAW_VIEW[arr.dtype.itemsize])
+
+
+def _restore_dtype(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if arr.dtype.name == dtype_name:
+        return arr
+    return arr.view(np.dtype(getattr(ml_dtypes, dtype_name, dtype_name)))
+
+
+def _flatten(tree):
+    leaves, tdef = jax.tree_util.tree_flatten(tree)
+    return leaves, tdef
+
+
+def _treedef_to_str(tdef) -> str:
+    return str(tdef)
+
+
+def save(ckpt_dir: str, step: int, tree, extras: Optional[Dict[str, Any]] = None):
+    """Atomic checkpoint write. ``tree`` is any pytree of arrays."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, tdef = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=ckpt_dir)
+    try:
+        arrs = [np.asarray(jax.device_get(l)) for l in leaves]
+        for i, arr in enumerate(arrs):
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), _savable(arr))
+        manifest = {
+            "step": step,
+            "n_leaves": len(leaves),
+            "treedef": _treedef_to_str(tdef),
+            "shapes": [list(a.shape) for a in arrs],
+            "dtypes": [a.dtype.name for a in arrs],
+            "extras": extras or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                       # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *complete* checkpoint step, validating the manifest."""
+    latest = os.path.join(ckpt_dir, "LATEST")
+    candidates = []
+    if os.path.exists(latest):
+        with open(latest) as f:
+            candidates.append(f.read().strip())
+    if os.path.isdir(ckpt_dir):
+        candidates += sorted((d for d in os.listdir(ckpt_dir)
+                              if d.startswith("step_")), reverse=True)
+    for name in candidates:
+        man = os.path.join(ckpt_dir, name, "manifest.json")
+        if os.path.exists(man):
+            try:
+                with open(man) as f:
+                    return int(json.load(f)["step"])
+            except (json.JSONDecodeError, KeyError, ValueError):
+                continue                             # torn write: skip
+    return None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
+    """Load checkpoint ``step`` into the structure of ``like_tree``.
+
+    ``like_tree`` may be arrays or ShapeDtypeStructs (uninitialized
+    restore). ``shardings``: optional matching pytree of NamedSharding —
+    leaves are device_put against it (mesh-elastic restore).
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    _, tdef = _flatten(like_tree)
+    n = manifest["n_leaves"]
+    leaves = [_restore_dtype(np.load(os.path.join(d, f"leaf_{i:05d}.npy")),
+                             manifest["dtypes"][i]) for i in range(n)]
+    if shardings is not None:
+        shard_leaves = tdef.flatten_up_to(shardings)
+        leaves = [jax.device_put(l, s) for l, s in zip(leaves, shard_leaves)]
+    tree = tdef.unflatten(leaves)
+    return tree, manifest["extras"]
+
+
+def prune(ckpt_dir: str, keep: int = 3):
+    """Delete all but the newest ``keep`` complete checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

@@ -1,0 +1,87 @@
+"""Gradient compression for the cross-pod all-reduce (DESIGN.md §5).
+
+int8 symmetric quantization with **error feedback** (residual carried in
+the optimizer state): the distributed-optimization trick the paper's int8
+machinery makes natural. Compression happens *before* the (pod) gradient
+all-reduce — the slow inter-pod links carry 4x fewer bytes — and the EF
+residual keeps convergence unbiased (Seide et al. / Karimireddy et al.).
+
+On a single pod the trainer leaves this off; the multi-pod launcher turns
+it on for the ``pod`` axis only (intra-pod reduce-scatter stays bf16).
+
+Implementation notes: stochastic rounding (counter-based threefry from
+the step index) makes E[q] = g/scale exact; per-leaf scales are f32 and
+all-reduced alongside (negligible bytes).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _leaf_quantize(g: jax.Array, rng: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(gf))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    x = gf / scale
+    # stochastic rounding: floor(x + u), u ~ U[0,1)
+    u = jax.random.uniform(rng, g.shape, jnp.float32)
+    q = jnp.clip(jnp.floor(x + u), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, residual, step: jax.Array):
+    """-> (q_tree int8, scale_tree f32, new_residual).
+
+    residual is the error-feedback state (same tree as grads, f32);
+    pass None to start from zero.
+    """
+    leaves, tdef = jax.tree_util.tree_flatten(grads)
+    if residual is None:
+        res_leaves = [jnp.zeros(l.shape, jnp.float32) for l in leaves]
+    else:
+        res_leaves = tdef.flatten_up_to(residual)
+    base = jax.random.PRNGKey(0)
+    base = jax.random.fold_in(base, step)
+    qs, scales, new_res = [], [], []
+    for i, (g, r) in enumerate(zip(leaves, res_leaves)):
+        corrected = g.astype(jnp.float32) + r
+        q, s = _leaf_quantize(corrected, jax.random.fold_in(base, i))
+        deq = q.astype(jnp.float32) * s
+        qs.append(q)
+        scales.append(s)
+        new_res.append(corrected - deq)          # error feedback
+    return (tdef.unflatten(qs), tdef.unflatten(scales),
+            tdef.unflatten(new_res))
+
+
+def decompress_grads(q_tree, scale_tree):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scale_tree)
+
+
+def compressed_psum(grads, residual, step: jax.Array, axis: Optional[str]):
+    """Quantize -> psum(int32) -> dequantize with max-scale, inside
+    shard_map. With axis=None (single pod / already-reduced grads) this
+    degrades to the identity quantize-dequantize roundtrip + EF, used by
+    tests to bound the compression error."""
+    q, s, new_res = compress_grads(grads, residual, step)
+    if axis is not None:
+        # sum int8 payloads in int32; scales must match across members, so
+        # use the max scale (all-reduduced) — requantize against it first.
+        smax = jax.tree_util.tree_map(
+            lambda x: jax.lax.pmax(x, axis), s)
+        q = jax.tree_util.tree_map(
+            lambda qq, s_old, s_new: jnp.clip(jnp.round(
+                qq.astype(jnp.float32) * (s_old / s_new)), -127, 127
+            ).astype(jnp.int8), q, s, smax)
+        summed = jax.tree_util.tree_map(
+            lambda qq: jax.lax.psum(qq.astype(jnp.int32), axis), q)
+        n = jax.lax.psum(1, axis)
+        out = jax.tree_util.tree_map(
+            lambda acc, sc: acc.astype(jnp.float32) * sc / n, summed, smax)
+    else:
+        out = decompress_grads(q, s)
+    return out, new_res

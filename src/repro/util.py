@@ -1,0 +1,26 @@
+"""Small shared utilities / runtime flags."""
+from __future__ import annotations
+
+import os
+
+_UNROLL_ENV = "REPRO_UNROLL_SCANS"
+
+
+def scan_unroll():
+    """Read at trace time: when truthy, layer/chunk/block scans fully
+    unroll. The dry-run uses this for its cost-analysis pass because XLA's
+    ``cost_analysis()`` counts a while-loop body ONCE regardless of trip
+    count (verified experimentally) — unrolled lowering restores exact
+    FLOP/byte/collective totals. Normal runs keep rolled scans (small HLO,
+    fast SPMD compiles, sequential-reuse buffers)."""
+    v = os.environ.get(_UNROLL_ENV, "0")
+    try:
+        n = int(v)
+    except ValueError:
+        return False
+    return True if n == 1 else (n if n > 1 else False)
+
+
+def ffn_seq_shard() -> bool:
+    """§Perf hillclimb A toggle: sequence-sharded FFN intermediates."""
+    return os.environ.get("REPRO_FFN_SEQ_SHARD", "0") == "1"

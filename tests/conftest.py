@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real
+1-device CPU host (the 512-device override belongs ONLY to dryrun.py)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+@pytest.fixture(autouse=True)
+def _x64_off():
+    # the framework is bf16/f32 throughout; keep tests in default mode
+    yield
+
+
+def assert_trees_close(a, b, rtol=1e-5, atol=1e-5):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)

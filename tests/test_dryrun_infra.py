@@ -1,0 +1,93 @@
+"""Dry-run infrastructure unit tests: HLO collective parser (incl. the
+nesting-aware trip-count multipliers) and the jaxpr cost walker."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo
+from repro.launch.jaxpr_cost import jaxpr_cost
+
+_FAKE_HLO = """\
+HloModule test, is_scheduled=true
+
+%inner.body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[64,32]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%add
+  ROOT %t = (s32[], f32[8]) tuple(%a, %b)
+}
+
+%outer.body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %w2 = (s32[], f32[8]) while(%arg), condition=%c2, body=%inner.body, backend_config={"known_trip_count":{"n":"4"}}
+  %ag = bf16[128]{0} all-gather(%y), channel_id=2, replica_groups=[32,8]<=[256], dimensions={0}, use_global_device_ids=true
+  ROOT %t2 = (s32[], f32[8]) tuple(%a, %b)
+}
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %w1 = (s32[], f32[8]) while(%init), condition=%c1, body=%outer.body, backend_config={"known_trip_count":{"n":"48"}}
+  %cp = f32[16]{0} collective-permute(%z), channel_id=3, source_target_pairs={{0,1}}
+  ROOT %out = f32[8] copy(%r)
+}
+"""
+
+
+def test_collective_parser_trip_counts():
+    cb = hlo.collective_bytes(_FAKE_HLO)
+    # all-reduce: inside inner (48*4=192 execs), 64*32*4B out, n=16:
+    #   wire = 2*B*(15/16) per exec
+    ar = 192 * 2 * (64 * 32 * 4) * 15 / 16
+    assert abs(cb["all-reduce"] - int(ar)) <= 192, cb
+    # all-gather: inside outer (48 execs), 128*2B, n=8
+    ag = 48 * (128 * 2) * 7 / 8
+    assert abs(cb["all-gather"] - int(ag)) <= 48, cb
+    # collective-permute at entry: once, 16*4B
+    assert cb["collective-permute"] == 64, cb
+
+
+def test_jaxpr_cost_known_matmul():
+    a = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    c = jaxpr_cost(lambda x, y: x @ y, a, b)
+    assert c["flops"] == 2 * 128 * 64 * 32
+
+
+def test_jaxpr_cost_counts_scan_trips():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+
+    def f(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    c = jaxpr_cost(f, x, ws)
+    assert c["flops"] == 10 * 2 * 64 * 64 * 64   # trip count honoured
+
+
+def test_jaxpr_cost_grad_and_remat():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def loss(w):
+        h = jax.checkpoint(lambda w: jnp.tanh(w @ w))(w)
+        return jnp.sum(h)
+
+    c = jaxpr_cost(jax.grad(loss), x)
+    base = 2 * 32 ** 3
+    # fwd + remat recompute + two bwd matmuls >= 3x the primal matmul
+    assert c["flops"] >= 3 * base
+
+
+def test_roofline_terms_math():
+    r = hlo.roofline_terms({"flops": 197e12, "bytes accessed": 819e9},
+                           {"total": 50e9}, model_flops_per_dev=98.5e12)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert r.useful_ratio == 0.5
+    assert r.dominant in ("compute", "memory", "collective")
+
+
+def test_model_flops_train_vs_decode():
+    from repro.configs.base import SHAPES, get_arch
+    cfg = get_arch("qwen2.5-14b")
+    tr = hlo.model_flops(cfg, SHAPES["train_4k"])
+    de = hlo.model_flops(cfg, SHAPES["decode_32k"])
+    assert tr > de * 1000            # train step >> one decode token
+    moe = get_arch("qwen3-moe-235b-a22b")
+    assert moe.active_param_count() < 0.2 * moe.param_count()

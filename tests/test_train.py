@@ -1,0 +1,168 @@
+"""Trainer integration: loss goes down, checkpoint/restart is exact,
+NaN guard skips, compression is bounded-error, schedules behave."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, reduced
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models.model import build_model
+from repro.optim.schedule import warmup_cosine
+from repro.train import checkpoint as ckpt_lib
+from repro.train import compress, fault
+from repro.train.trainer import TrainConfig, Trainer, init_opt_state, \
+    make_train_step
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_arch("qwen2.5-14b"), num_layers=2)
+    return build_model(cfg)
+
+
+def _data_fn(cfg, B=4, S=32):
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=S, global_batch=B)
+    return lambda s: make_batch(dc, s)
+
+
+def test_trainer_loss_decreases(small_model, tmp_path):
+    tc = TrainConfig(total_steps=10, warmup_steps=2, peak_lr=1e-3,
+                     log_every=100, ckpt_every=100)
+    tr = Trainer(small_model, tc, _data_fn(small_model.cfg),
+                 log_fn=lambda *_: None)
+    _, _, hist = tr.run()
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_checkpoint_resume_bitexact(small_model, tmp_path):
+    """Stateless data + atomic ckpt => a preempted run resumed from disk
+    produces EXACTLY the params of an uninterrupted run."""
+    tc = TrainConfig(total_steps=6, warmup_steps=1, log_every=100,
+                     ckpt_every=3)
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    # uninterrupted
+    tr = Trainer(small_model, tc, _data_fn(small_model.cfg), ckpt_dir=d1,
+                 log_fn=lambda *_: None)
+    p_full, _, _ = tr.run()
+    # interrupted at step 3, then resumed
+    tr2 = Trainer(small_model, tc, _data_fn(small_model.cfg), ckpt_dir=d2,
+                  log_fn=lambda *_: None)
+    tr2.run(steps=3)
+    tr3 = Trainer(small_model, tc, _data_fn(small_model.cfg), ckpt_dir=d2,
+                  log_fn=lambda *_: None)
+    p_res, _, _ = tr3.run()
+    for a, b in zip(jax.tree_util.tree_leaves(p_full),
+                    jax.tree_util.tree_leaves(p_res)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_nan_guard_skips_bad_step(small_model):
+    tc = TrainConfig(total_steps=1, warmup_steps=1)
+    step = jax.jit(make_train_step(small_model, tc))
+    p = small_model.init(jax.random.PRNGKey(0))
+    st = init_opt_state(p, tc)
+    batch = {k: jnp.asarray(v) for k, v in
+             _data_fn(small_model.cfg)(0).items() if k != "lengths"}
+    # poison the final norm (always in the path) -> NaN loss -> skip
+    p_bad = dict(p, final_ln={"scale": p["final_ln"]["scale"] * jnp.nan})
+    p2, st2, m = step(p_bad, st, batch)
+    assert float(m["step_ok"]) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(p2["embed"], np.float32),
+        np.asarray(p_bad["embed"], np.float32))      # untouched
+    assert int(st2["step"]) == 0                     # not advanced
+
+
+def test_ckpt_atomicity_torn_write(tmp_path, small_model):
+    """A torn/corrupt newest checkpoint is skipped; restore falls back."""
+    p = small_model.init(jax.random.PRNGKey(0))
+    d = str(tmp_path)
+    ckpt_lib.save(d, 1, p)
+    ckpt_lib.save(d, 2, p)
+    # corrupt step 2's manifest (simulates a crash mid-publish)
+    with open(os.path.join(d, "step_00000002", "manifest.json"), "w") as f:
+        f.write("{not json")
+    assert ckpt_lib.latest_step(d) == 1
+
+
+def test_ckpt_prune(tmp_path, small_model):
+    p = {"w": jnp.ones((4,))}
+    for s in range(5):
+        ckpt_lib.save(str(tmp_path), s, p)
+    ckpt_lib.prune(str(tmp_path), keep=2)
+    steps = sorted(x for x in os.listdir(tmp_path) if x.startswith("step_"))
+    assert len(steps) == 2
+
+
+def test_elastic_restore_other_mesh(tmp_path, small_model):
+    """Checkpoint written unsharded restores onto a (1,1) mesh with the
+    sharding rules applied — the elastic-restart path."""
+    from repro.launch.mesh import make_host_mesh
+    p = small_model.init(jax.random.PRNGKey(0))
+    ckpt_lib.save(str(tmp_path), 7, p)
+    mesh = make_host_mesh()
+    out = fault.elastic_restore(str(tmp_path), jax.eval_shape(lambda: p),
+                                mesh)
+    assert out is not None
+    step, tree, _ = out
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_retry_wrapper():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert fault.with_retries(flaky, max_retries=3, base_delay=0.0,
+                              log=lambda *_: None)() == "ok"
+    assert len(calls) == 3
+
+
+def test_compression_error_feedback_bounded(rng):
+    """int8+EF compression: single-step error is quantization-scale
+    bounded, and the residual carries what was lost."""
+    g = {"a": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal((128,)), jnp.float32) * 10}
+    out, res = compress.compressed_psum(g, None, jnp.asarray(0), None)
+    for k in g:
+        scale = float(jnp.max(jnp.abs(g[k]))) / 127.0
+        err = float(jnp.max(jnp.abs(out[k] - g[k])))
+        assert err <= scale + 1e-6, (k, err, scale)
+        np.testing.assert_allclose(np.asarray(g[k] - out[k]),
+                                   np.asarray(res[k]), atol=1e-6)
+
+
+def test_compression_ef_converges(rng):
+    """Repeatedly compressing the SAME gradient with EF: the cumulative
+    applied update approaches k*g (error does not accumulate)."""
+    g = {"w": jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)}
+    res = None
+    applied = jnp.zeros_like(g["w"])
+    for s in range(20):
+        out, res = compress.compressed_psum(g, res, jnp.asarray(s), None)
+        applied = applied + out["w"]
+    np.testing.assert_allclose(np.asarray(applied / 20),
+                               np.asarray(g["w"]), atol=0.02)
+
+
+def test_schedule_shape():
+    lrs = [float(warmup_cosine(jnp.asarray(s), peak_lr=1e-3,
+                               warmup_steps=10, total_steps=100))
+           for s in range(100)]
+    assert lrs[0] == 0.0
+    assert abs(max(lrs) - 1e-3) < 1e-9
+    assert np.argmax(lrs) == 10
+    assert lrs[-1] < 2.1e-4          # decays toward final_frac*peak

@@ -1,0 +1,84 @@
+"""int8 X-cache (beyond-paper, macro-format): decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch, reduced
+from repro.models import attention as attn
+from repro.models.model import build_model
+
+
+def _run_decode(cfg, n_steps=5):
+    model = build_model(cfg)
+    p = model.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(7)
+    B = 2
+    batch = {"tokens": jnp.asarray([[1], [1]], jnp.int32),
+             "lengths": jnp.ones((B,), jnp.int32),
+             "enc_embeds": jnp.asarray(
+                 rng.standard_normal((B, 24, cfg.d_model)), jnp.float32)}
+    logits, cache = model.prefill(p, batch, 24)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [[int(t) for t in tok]]
+    seq = []
+    for step in range(n_steps):
+        logits, cache = model.decode_step(
+            p, cache, tok, jnp.full((B,), 1 + step, jnp.int32))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        seq.append(np.asarray(logits, np.float32))
+        out.append([int(t) for t in tok])
+    return out, seq, cache
+
+
+def test_int8_xcache_matches_bf16():
+    base = reduced(get_arch("whisper-tiny"), num_layers=2)
+    toks_bf16, logits_bf16, _ = _run_decode(base)
+    cfg8 = dataclasses.replace(base, cache_quant="int8")
+    toks_int8, logits_int8, cache8 = _run_decode(cfg8)
+    assert cache8["attn"].x.dtype == jnp.int8
+    assert cache8["attn"].xs is not None
+    # greedy tokens identical; logits close (per-token int8 quant noise)
+    assert toks_bf16 == toks_int8
+    for a, b in zip(logits_bf16, logits_int8):
+        np.testing.assert_allclose(a, b, atol=0.25)
+
+
+def test_int8_kv_cache_matches_bf16():
+    """int8 KV cache (standard-score path): greedy decode identical."""
+    base = reduced(get_arch("gemma3-27b"), num_layers=3)
+    rng = np.random.default_rng(7)
+    B, S, MAX = 2, 12, 24
+    toks = jnp.asarray(rng.integers(3, base.vocab_size, (B, S)), jnp.int32)
+    outs = {}
+    for quant in [None, "int8"]:
+        cfg = dataclasses.replace(base, cache_quant=quant)
+        model = build_model(cfg)
+        p = model.init(jax.random.PRNGKey(2))
+        batch = {"tokens": toks, "lengths": jnp.full((B,), S, jnp.int32)}
+        logits, cache = model.prefill(p, batch, MAX)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        seq = [[int(t) for t in tok]]
+        for step in range(4):
+            logits, cache = model.decode_step(
+                p, cache, tok, jnp.full((B,), S + step, jnp.int32))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            seq.append([int(t) for t in tok])
+        if quant == "int8":
+            assert cache["attn"].k.dtype == jnp.int8
+            assert cache["attn"].ks is not None
+        outs[quant] = seq
+    assert outs[None] == outs["int8"]
+
+
+def test_int8_cache_bytes_halved():
+    cfg = get_arch("whisper-tiny")
+    cfg8 = dataclasses.replace(cfg, cache_quant="int8")
+    c_bf = jax.eval_shape(lambda: attn.init_kv_cache(cfg, 2, 64,
+                                                     jnp.bfloat16))
+    c_i8 = jax.eval_shape(lambda: attn.init_kv_cache(cfg8, 2, 64,
+                                                     jnp.bfloat16))
+    bytes_bf = c_bf.x.size * 2
+    bytes_i8 = c_i8.x.size * 1 + c_i8.xs.size * 4
+    assert bytes_i8 < 0.6 * bytes_bf

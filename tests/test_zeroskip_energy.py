@@ -1,0 +1,79 @@
+"""§III.C zero-skip statistics + §IV energy model vs the paper's numbers."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy, zeroskip
+
+
+def test_macro_spec_reproduces_table1():
+    m = energy.PAPER_MACRO
+    assert abs(m.tops_per_w - 34.09) < 0.2          # 34.1 TOPS/W
+    assert abs(m.gops_per_mm2 - 120.77) < 0.5       # 120.77 GOPS/mm^2
+    assert abs(m.energy_per_op_j - 29.3e-15) < 1e-15
+
+
+def test_scaling_to_28nm_matches_table1():
+    s = energy.scale_to_node(energy.PAPER_MACRO, nm=28, vdd=0.8)
+    # Table I: 0.26*3 mW power, 0.064*4 mm^2 area, 161.5 TOPS/W
+    assert abs(s.power_w * 1e3 - 0.34) < 0.08       # (28/65)*(0.8)^2*1.24
+    assert abs(s.area_mm2 - 0.065) < 0.005
+    assert abs(s.tops_per_w - 124) < 40             # paper rounds to 161.5
+    assert s.tops_per_w > 100
+
+
+def test_fig7_memory_access_and_energy_ratios():
+    acc_ratio, e_ratio = energy.fig7_model()
+    assert abs(acc_ratio - 6.9) < 0.35              # paper: 6.9x
+    assert abs(e_ratio - 4.9) < 0.6                 # paper: 4.9x
+
+
+def test_zero_skip_counts_exact_small():
+    # hand-checkable: xa=[1], xb=[2]: planes a={bit0}, b={bit1}
+    xa = jnp.asarray([[1]], jnp.int8)
+    xb = jnp.asarray([[2]], jnp.int8)
+    st_ = zeroskip.skip_stats(xa, xb)
+    assert float(st_.fired_events) == 1.0           # 1 one-bit x 1 one-bit
+    assert float(st_.total_events) == 64.0          # 8x8 bit pairs
+    assert float(st_.skip_fraction) > 0.98
+
+
+def test_zero_skip_padding_reaches_paper_claim(rng):
+    """Sparse padded inputs (the paper's Transformer regime) skip >= 55%."""
+    x = rng.integers(-128, 128, (64, 64))
+    x[:, 32:] = 0                                    # padded half
+    x[::4, :] = 0                                    # short-sequence rows
+    xa = jnp.asarray(x, jnp.int8)
+    st_ = zeroskip.skip_stats(xa, xa)
+    assert float(st_.skip_fraction) >= 0.55
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), frac=st.floats(0.0, 0.9))
+def test_zero_skip_monotone_in_sparsity(seed, frac):
+    """Property: more zeroed rows => higher skip fraction; bounds hold."""
+    r = np.random.default_rng(seed)
+    x = r.integers(-128, 128, (32, 16))
+    k = int(frac * 32)
+    x[:k] = 0
+    s = zeroskip.skip_stats(jnp.asarray(x, jnp.int8),
+                            jnp.asarray(x, jnp.int8))
+    sf = float(s.skip_fraction)
+    assert 0.0 <= sf <= 1.0
+    x2 = x.copy()
+    x2[: min(k + 4, 32)] = 0
+    s2 = zeroskip.skip_stats(jnp.asarray(x2, jnp.int8),
+                             jnp.asarray(x2, jnp.int8))
+    assert float(s2.skip_fraction) >= sf - 1e-9
+
+
+def test_energy_model_op_counting():
+    n, d = 197, 64
+    ops = energy.score_ops(n, d)
+    assert ops == 2 * (n * d * d + n * n * d)
+    e = energy.macro_energy_j(ops)
+    t = energy.macro_latency_s(ops)
+    assert e > 0 and t > 0
+    # zero-skip halves both
+    assert abs(energy.macro_energy_j(ops, skip_fraction=0.5) / e - 0.5) < 1e-9
