@@ -5,6 +5,7 @@ from __future__ import annotations
 
 from repro.configs.base import get_arch, list_archs
 from repro.core import energy
+from repro.core import score_backend as sb
 from repro.serving import kvcache
 
 
@@ -12,7 +13,7 @@ def run(report):
     report.section("W_QK fold vs standard per arch (decode economics)")
     report.row(f"{'arch':22s} {'D':>6s} {'2*Hkv*dh':>8s} "
                f"{'x-cache/kv-cache':>16s} {'fold wins?':>10s} "
-               f"{'score-exact?':>12s}")
+               f"{'score-exact?':>12s} {'planned backend':>16s}")
     for name in list_archs():
         cfg = get_arch(name)
         if not cfg.num_heads:
@@ -23,9 +24,11 @@ def run(report):
         ratio = modes["x"] / modes["kv"]
         wins = ratio < 1.0
         exact = cfg.pos_emb in ("absolute", "none")
+        plan = sb.plan(cfg)
         report.row(f"{name:22s} {cfg.d_model:6d} "
                    f"{2*cfg.num_kv_heads*cfg.head_dim:8d} "
-                   f"{ratio:16.2f} {str(wins):>10s} {str(exact):>12s}")
+                   f"{ratio:16.2f} {str(wins):>10s} {str(exact):>12s} "
+                   f"{plan.backend.name:>16s}")
     report.check("whisper-tiny: fold wins on memory AND is exact",
                  kvcache.compare_modes(get_arch('whisper-tiny'))["x"]
                  < kvcache.compare_modes(get_arch('whisper-tiny'))["kv"])

@@ -11,23 +11,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitserial, energy, quant, zeroskip
-from repro.core.attention_scores import ScoreWeights, compute_scores, fold
+from repro.core import bitserial, energy, quant, score_backend as sb, zeroskip
+from repro.core.score_backend import ScoreWeights
 
 rng = np.random.default_rng(0)
 D, H, dh, N = 64, 4, 16, 197          # ViT-ish geometry (the paper's)
 
-# --- 1. fold the combined QK weight (deploy-time, Eq. 2) ---------------
+# --- 1. pick a backend from the registry; fold W_QK (deploy-time, Eq. 2)
+print(f"registered score backends: {sb.list_backends()}")
+wqk_be = sb.get_backend("wqk")
 sw = ScoreWeights(
     wq=jnp.asarray(rng.standard_normal((D, H, dh)) * 0.1, jnp.float32),
     wk=jnp.asarray(rng.standard_normal((D, H, dh)) * 0.1, jnp.float32))
-folded = fold(sw)
+folded = wqk_be.fold(sw)
 print(f"W_QK folded: {folded.wqk.shape}  (H x D x D, weight-stationary)")
 
 # --- 2. scores from RAW inputs: S = X W_QK X^T (Eq. 3) -----------------
 x = jnp.asarray(rng.standard_normal((N, D)), jnp.float32)
-s_std = compute_scores("standard", x, x, sw, scale=dh ** -0.5)
-s_wqk = compute_scores("wqk", x, x, folded, scale=dh ** -0.5)
+s_std = sb.get_backend("standard").scores(x, x, sw, scale=dh ** -0.5)
+s_wqk = wqk_be.scores(x, x, folded, scale=dh ** -0.5)
 print(f"max |standard - wqk| = {float(jnp.max(jnp.abs(s_std - s_wqk))):.2e}"
       f"   (exact: Q and K never materialize)")
 

@@ -14,6 +14,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_arch, reduced
+from repro.core import score_backend as sb
 from repro.models import frontends
 from repro.models.model import build_model
 from repro.serving import kvcache
@@ -26,8 +27,10 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    plan = sb.plan(cfg, seq_len=96)
     budget = kvcache.budget_for(cfg)
-    print(f"cache mode: {budget.mode!r} "
+    print(f"score backend: {plan.backend.name!r}; cache mode: "
+          f"{budget.mode!r} "
           f"(bytes/token/layer: {kvcache.compare_modes(cfg)}) — the "
           f"X-cache stores raw inputs; scores AND values recompute "
           f"through the stationary weights")

@@ -15,6 +15,7 @@ import dataclasses
 import jax
 
 from repro.configs.base import get_arch, reduced
+from repro.core import score_backend
 from repro.data.pipeline import DataConfig, make_batch
 from repro.models import frontends
 from repro.models.model import build_model
@@ -42,7 +43,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
     ap.add_argument("--score-mode", default="standard",
-                    choices=["standard", "wqk", "wqk_int8"])
+                    choices=score_backend.list_backends())
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)

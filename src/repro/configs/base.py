@@ -11,13 +11,20 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 # ---------------------------------------------------------------------------
-# Score modes: the paper's technique as a first-class feature.
-#   standard  - S = (X W_Q)(X W_K)^T                      (baseline)
-#   wqk       - S = X W_QK X^T, W_QK = W_Q W_K^T folded   (paper, float)
-#   wqk_int8  - W8A8 integer scores via folded W_QK       (paper, TPU-native
-#               adaptation of the bit-serial multiplier-free MAC)
-# RoPE archs use the 2-term decomposed fold (DESIGN.md S4) when wqk* is on.
-SCORE_MODES = ("standard", "wqk", "wqk_int8")
+# Score backends: the paper's technique as a first-class feature.
+# ``score_mode`` names a backend in the core.score_backend registry:
+#   standard        - S = (X W_Q)(X W_K)^T                (baseline)
+#   wqk             - S = X W_QK X^T, W_QK folded         (paper, float)
+#   wqk_int8        - W8A8 integer scores via folded W_QK (paper, TPU-native
+#                     adaptation of the bit-serial multiplier-free MAC)
+#   wqk_int8_pallas - same numerics via the fused Pallas kernel
+#   factored        - rank-dh evaluation (D >> dh archs)
+# The planner (score_backend.plan) may substitute within capability
+# limits (e.g. wqk_int8 -> the Pallas kernel on TPU when D_aug fits
+# VMEM). RoPE archs get NoPE arithmetic on wqk*/factored (DESIGN.md §4).
+# SCORE_MODES is a deprecated static snapshot kept one release; the
+# registry (score_backend.list_backends()) is canonical.
+SCORE_MODES = ("standard", "wqk", "wqk_int8", "wqk_int8_pallas", "factored")
 
 
 @dataclass(frozen=True)
@@ -75,8 +82,9 @@ class ModelConfig:
     # modality frontend stub: inputs are precomputed embeddings of this dim
     frontend: Optional[str] = None   # None | audio | vision
     # --- paper technique ---
-    score_mode: str = "standard"
-    wqk_explicit: bool = True        # explicit DxD W_QK (paper) vs factored
+    score_mode: str = "standard"     # ScoreBackend registry name
+    wqk_explicit: bool = True        # explicit DxD W_QK (paper); False lets
+                                     # the planner swap wqk -> factored
     # decode-cache mode override: None = auto (kv for standard scores;
     # pure-x when D < 2*Hkv*dh else xv). 'x' trades V-recompute flops for
     # halved cache; crossover measured in EXPERIMENTS.md §Perf (C).

@@ -1,79 +1,40 @@
-"""Unified attention-score API — the paper's technique as a first-class op.
+"""DEPRECATED stringly-typed score API — thin shim over the ScoreBackend
+registry (core.score_backend). Kept for one release.
 
-Models and the serving engine call ``compute_scores`` with a mode string;
-everything downstream (masking, softmax, AV) is mode-agnostic.
+``compute_scores(mode, ...)`` now resolves ``mode`` through
+``score_backend.get_backend`` and delegates; new code should use the
+registry directly::
 
-Modes
------
-standard : S = (rope(X Wq)) (rope(X Wk))^T           — baseline
-wqk      : S = X W_QK X^T   (Eq. 3), float           — paper, folded
-wqk_int8 : W8A8 integer scores on folded W_QK        — paper, TPU-native
-           adaptation of the multiplier-free bit-serial MAC
+    from repro.core import score_backend as sb
+    be = sb.get_backend("wqk")            # or sb.plan(cfg).backend
+    s = be.scores(x_q, x_kv, be.fold(sw), scale=scale)
 
-For ``wqk*`` modes the fold is exact iff the arch has absolute/no
-positional encoding (DESIGN.md §4); RoPE archs get NoPE arithmetic.
+``ScoreWeights`` is re-exported from its canonical home in
+core.score_backend.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+import warnings
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import wqk as wqk_mod
-
-
-class ScoreWeights(NamedTuple):
-    wq: jax.Array                       # (D, H, dh)
-    wk: jax.Array                       # (D, Hkv, dh)
-    bq: Optional[jax.Array] = None      # (H, dh)
-    bk: Optional[jax.Array] = None      # (Hkv, dh)
-    wqk: Optional[jax.Array] = None     # (H, D[+1], D[+1]) pre-folded
+from repro.core.score_backend import (  # noqa: F401  (re-exports)
+    ScoreWeights, get_backend, list_backends)
 
 
 def fold(sw: ScoreWeights) -> ScoreWeights:
     """Deploy-time folding: attach the combined W_QK (Eq. 2)."""
-    return sw._replace(wqk=wqk_mod.fold_wqk(sw.wq, sw.wk, sw.bq, sw.bk))
-
-
-def _folded(sw: ScoreWeights) -> jax.Array:
-    if sw.wqk is not None:
-        return sw.wqk
-    return wqk_mod.fold_wqk(sw.wq, sw.wk, sw.bq, sw.bk)
+    return get_backend("wqk").fold(sw)
 
 
 def compute_scores(mode: str, x_q: jax.Array, x_kv: jax.Array,
                    sw: ScoreWeights, scale: float,
                    rope_fn: Optional[Callable] = None) -> jax.Array:
-    """-> (..., H, Nq, Nk) f32 scores, already scaled by ``scale``.
-
-    x_q (..., Nq, D), x_kv (..., Nk, D): *raw* layer inputs (post-norm),
-    exactly what the CIM macro streams. rope_fn(q_or_k, which) applies
-    rotary embedding for the standard path; ignored by wqk paths.
-    """
-    if mode == "standard":
-        rep = sw.wq.shape[1] // sw.wk.shape[1]
-        q = jnp.einsum("...nd,dhe->...hne", x_q, sw.wq.astype(x_q.dtype))
-        k = jnp.einsum("...nd,dhe->...hne", x_kv,
-                       jnp.repeat(sw.wk, rep, axis=1).astype(x_kv.dtype))
-        if sw.bq is not None:
-            q = q + sw.bq[:, None, :].astype(q.dtype)
-        if sw.bk is not None:
-            k = k + jnp.repeat(sw.bk, rep, axis=0)[:, None, :].astype(k.dtype)
-        if rope_fn is not None:
-            q = rope_fn(q, "q")
-            k = rope_fn(k, "k")
-        s = jnp.einsum("...hne,...hme->...hnm", q.astype(jnp.float32),
-                       k.astype(jnp.float32))
-        return s * scale
-
-    w = _folded(sw)
-    aug = w.shape[-1] == x_q.shape[-1] + 1
-    if aug:
-        x_q = wqk_mod.augment_ones(x_q)
-        x_kv = wqk_mod.augment_ones(x_kv)
-    if mode == "wqk":
-        return wqk_mod.wqk_scores(x_q, x_kv, w) * scale
-    if mode == "wqk_int8":
-        return wqk_mod.wqk_scores_int8(x_q, x_kv, w) * scale
-    raise ValueError(f"unknown score mode {mode!r}")
+    """Deprecated: use ``score_backend.get_backend(mode).scores(...)``."""
+    warnings.warn(
+        "compute_scores(mode, ...) is deprecated; use the ScoreBackend "
+        "registry (repro.core.score_backend)", DeprecationWarning,
+        stacklevel=2)
+    return get_backend(mode).scores(x_q, x_kv, sw, scale=scale,
+                                    rope_fn=rope_fn)

@@ -1,0 +1,410 @@
+"""ScoreBackend registry — one pluggable API for every attention-score path.
+
+The paper's central object is a *single macro* that serves attention-score
+computation from a folded W_QK; deployment only decides which physical
+path evaluates S. This module makes that deployment decision first-class:
+
+  * ``ScoreBackend`` — the protocol every score path implements:
+    ``fold(weights)`` (deploy-time weight preparation), ``scores(...)``
+    (the bilinear form itself), ``blockwise_qk(...)`` (inputs for the
+    online-softmax flash schedule), plus capability flags
+    (``needs_rope``, ``folds_bias``, ``supports_blockwise``,
+    ``max_d_aug``, ``uses_x_cache``) and ``memory_bytes_per_token``.
+  * ``register_backend(name)`` — registry decorator; adding the next
+    path (bit-plane zero-skip simulator, sharded/ring variant) is a
+    single registration, not another if-chain in four files.
+  * ``plan(cfg, ...)`` — the planner: picks the backend + execution
+    schedule (quadratic vs blockwise-flash, jnp vs the Pallas
+    ``wqk_score`` fused kernel when ``d_aug <= VMEM_D_LIMIT``) and the
+    decode-cache layout, all from capability flags.
+
+Registered backends
+-------------------
+standard        : S = (rope(X Wq)) (rope(X Wk))^T              — baseline
+wqk             : S = X W_QK X^T (Eq. 3), float                — paper
+wqk_int8        : W8A8 integer scores on folded W_QK           — paper, MXU
+wqk_int8_pallas : same numerics through the fused Pallas kernel
+                  (kernels/wqk_score), VMEM-resident W_QK
+factored        : rank-dh evaluation of the same bilinear form
+                  (for D >> dh where the explicit fold is FLOPs-prohibitive)
+
+For the ``wqk*``/``factored`` family the fold is exact iff the arch has
+absolute/no positional encoding (DESIGN.md §4); RoPE archs get NoPE
+arithmetic on these backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core import wqk as wqk_mod
+
+# Max augmented D for which one head's W_QK stays VMEM-resident in the
+# fused Pallas kernel (mirrors kernels/wqk_score/ops.VMEM_D_LIMIT without
+# importing Pallas at module load).
+VMEM_D_LIMIT = 2048
+
+
+class ScoreWeights(NamedTuple):
+    """The raw score-side weights of one attention layer (canonical home;
+    re-exported by core.attention_scores for back-compat)."""
+    wq: jax.Array                       # (D, H, dh)
+    wk: jax.Array                       # (D, Hkv, dh)
+    bq: Optional[jax.Array] = None      # (H, dh)
+    bk: Optional[jax.Array] = None      # (Hkv, dh)
+    wqk: Optional[jax.Array] = None     # (H, D[+1], D[+1]) pre-folded
+
+
+# --------------------------------------------------------------- protocol
+
+class ScoreBackend:
+    """Base class / protocol for a pluggable attention-score path.
+
+    Capability flags (class attributes):
+      needs_rope         : rotary embedding applies inside the Q/K
+                           projections — only then is rope_fn honoured
+      folds_bias         : QKV biases fold into the weights via the
+                           constant-1 augmentation (D -> D+1)
+      supports_blockwise : can feed the online-softmax flash schedule
+      max_d_aug          : largest augmented D this backend handles
+                           (None = unlimited)
+      uses_x_cache       : decode cache stores raw X rows (the paper's
+                           weight-stationary dataflow) instead of K rows
+      quantized          : integer arithmetic inside the score path
+    """
+    name: str = "?"
+    needs_rope: bool = False
+    folds_bias: bool = False
+    supports_blockwise: bool = True
+    max_d_aug: Optional[int] = None
+    uses_x_cache: bool = False
+    quantized: bool = False
+
+    # ------------------------------------------------------------- fold
+    def fold(self, sw: ScoreWeights) -> ScoreWeights:
+        """Deploy-time weight preparation (default: identity)."""
+        return sw
+
+    def _folded(self, sw: ScoreWeights) -> jax.Array:
+        if sw.wqk is not None:
+            return sw.wqk
+        return wqk_mod.fold_wqk(sw.wq, sw.wk, sw.bq, sw.bk)
+
+    # ----------------------------------------------------------- scores
+    def scores(self, x_q: jax.Array, x_kv: jax.Array, sw: ScoreWeights,
+               *, scale: float,
+               rope_fn: Optional[Callable] = None) -> jax.Array:
+        """-> (..., H, Nq, Nk) f32 scores, already scaled by ``scale``.
+
+        x_q (..., Nq, D), x_kv (..., Nk, D): *raw* layer inputs
+        (post-norm), exactly what the CIM macro streams."""
+        raise NotImplementedError
+
+    def blockwise_qk(self, sw: ScoreWeights, x_q: jax.Array,
+                     x_kv: jax.Array, *, dtype,
+                     rope_q: Optional[Callable] = None,
+                     rope_k: Optional[Callable] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+        """Grouped (q, k) streams for the flash schedule.
+
+        x_q (B, N, D), x_kv (B, M, D) -> q (B, Gs, Rs, N, E),
+        k (B, Gs, M, E) with H = Gs*Rs (models/flash.py layout)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ sizing
+    def d_aug(self, cfg) -> int:
+        """Augmented feature dim the backend streams for ``cfg``."""
+        bias = bool(getattr(cfg, "qkv_bias", False)) and self.folds_bias
+        return cfg.d_model + (1 if bias else 0)
+
+    def supports(self, cfg) -> bool:
+        return self.max_d_aug is None or self.d_aug(cfg) <= self.max_d_aug
+
+    def memory_bytes_per_token(self, cfg, dtype_bytes: int = 2,
+                               cache_mode: Optional[str] = None) -> int:
+        """Decode-cache bytes per token per attention layer — the
+        quantity the paper's weight-stationary dataflow optimizes.
+        Sized from the (planned or given) cache layout."""
+        mode = cache_mode or _cache_mode(cfg, self)
+        kv_row = 2 * cfg.num_kv_heads * cfg.head_dim
+        x_row = cfg.d_model
+        per = {"kv": kv_row, "x": x_row, "xv": x_row + kv_row // 2}[mode]
+        return per * dtype_bytes
+
+    def __repr__(self):
+        return f"<ScoreBackend {self.name}>"
+
+
+# --------------------------------------------------------------- registry
+
+_BACKENDS: Dict[str, ScoreBackend] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: instantiate and register under ``name``."""
+    def deco(cls):
+        cls.name = name
+        if name in _BACKENDS:
+            raise ValueError(f"score backend {name!r} already registered")
+        _BACKENDS[name] = cls()
+        return cls
+    return deco
+
+
+def get_backend(name: Union[str, ScoreBackend]) -> ScoreBackend:
+    if isinstance(name, ScoreBackend):
+        return name
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown score backend {name!r}; "
+                       f"registered: {sorted(_BACKENDS)}")
+    return _BACKENDS[name]
+
+
+def list_backends() -> list:
+    return sorted(_BACKENDS)
+
+
+# --------------------------------------------------------------- backends
+
+class _BilinearMixin:
+    """Shared augmentation plumbing for the folded-W_QK family."""
+
+    def _augmented(self, sw: ScoreWeights, *xs):
+        w = self._folded(sw)
+        if w.shape[-1] == xs[0].shape[-1] + 1:
+            xs = tuple(wqk_mod.augment_ones(x) for x in xs)
+        return (w,) + xs
+
+
+@register_backend("standard")
+class StandardBackend(ScoreBackend):
+    """Baseline: materialize Q/K via projections (rope-capable)."""
+    needs_rope = True
+    uses_x_cache = False
+
+    def scores(self, x_q, x_kv, sw, *, scale, rope_fn=None):
+        rep = sw.wq.shape[1] // sw.wk.shape[1]
+        q = jnp.einsum("...nd,dhe->...hne", x_q, sw.wq.astype(x_q.dtype))
+        k = jnp.einsum("...nd,dhe->...hne", x_kv,
+                       jnp.repeat(sw.wk, rep, axis=1).astype(x_kv.dtype))
+        if sw.bq is not None:
+            q = q + sw.bq[:, None, :].astype(q.dtype)
+        if sw.bk is not None:
+            k = k + jnp.repeat(sw.bk, rep, axis=0)[:, None, :].astype(k.dtype)
+        if rope_fn is not None:
+            q = rope_fn(q, "q")
+            k = rope_fn(k, "k")
+        s = jnp.einsum("...hne,...hme->...hnm", q.astype(jnp.float32),
+                       k.astype(jnp.float32))
+        return s * scale
+
+    def blockwise_qk(self, sw, x_q, x_kv, *, dtype, rope_q=None, rope_k=None):
+        B = x_q.shape[0]
+        H, dh = sw.wq.shape[1], sw.wq.shape[2]
+        Hkv = sw.wk.shape[1]
+        q = jnp.einsum("bnd,dhe->bhne", x_q, sw.wq.astype(dtype))
+        k = jnp.einsum("bnd,dhe->bhne", x_kv, sw.wk.astype(dtype))
+        if sw.bq is not None:
+            q = q + sw.bq[:, None, :].astype(dtype)
+        if sw.bk is not None:
+            k = k + sw.bk[:, None, :].astype(dtype)
+        if rope_q is not None:
+            q = rope_q(q)
+        if rope_k is not None:
+            k = rope_k(k)
+        q = q.reshape(B, Hkv, H // Hkv, q.shape[-2], dh)
+        return q, k
+
+
+@register_backend("wqk")
+class WqkBackend(_BilinearMixin, ScoreBackend):
+    """Paper, float: S = X W_QK X^T through the folded weight (Eq. 3)."""
+    folds_bias = True
+    uses_x_cache = True
+
+    def fold(self, sw: ScoreWeights) -> ScoreWeights:
+        return sw._replace(wqk=self._folded(sw))
+
+    def scores(self, x_q, x_kv, sw, *, scale, rope_fn=None):
+        w, x_q, x_kv = self._augmented(sw, x_q, x_kv)
+        return wqk_mod.wqk_scores(x_q, x_kv, w) * scale
+
+    def blockwise_qk(self, sw, x_q, x_kv, *, dtype, rope_q=None, rope_k=None):
+        # Gs=1, Rs=H: one shared raw-X K-stream — the paper's dataflow
+        w, x_q, x_kv = self._augmented(sw, x_q, x_kv)
+        g = jnp.einsum("bnd,hde->bhne", x_q.astype(jnp.float32),
+                       w.astype(jnp.float32)).astype(dtype)
+        return g[:, None], x_kv[:, None]
+
+
+@register_backend("wqk_int8")
+class WqkInt8Backend(WqkBackend):
+    """Paper, W8A8: integer bilinear core on the folded W_QK — the
+    TPU-native adaptation of the multiplier-free bit-serial MAC."""
+    quantized = True
+
+    def scores(self, x_q, x_kv, sw, *, scale, rope_fn=None):
+        w, x_q, x_kv = self._augmented(sw, x_q, x_kv)
+        return wqk_mod.wqk_scores_int8(x_q, x_kv, w) * scale
+
+    def blockwise_qk(self, sw, x_q, x_kv, *, dtype, rope_q=None, rope_k=None):
+        # fake-quant (quantize->dequantize) reproduces the W8A8 numerics
+        # blockwise without materializing int32 scores
+        w, x_q, x_kv = self._augmented(sw, x_q, x_kv)
+        qg, sg = quant.quantize(x_q, axis=-1)
+        x_q = (qg.astype(jnp.float32) * sg).astype(x_q.dtype)
+        qk_, sk_ = quant.quantize(x_kv, axis=-1)
+        x_kv = (qk_.astype(jnp.float32) * sk_).astype(x_kv.dtype)
+        qw, sw_ = quant.quantize_per_tensor(w)
+        w = (qw.astype(jnp.float32) * sw_).astype(w.dtype)
+        g = jnp.einsum("bnd,hde->bhne", x_q.astype(jnp.float32),
+                       w.astype(jnp.float32)).astype(dtype)
+        return g[:, None], x_kv[:, None]
+
+
+@register_backend("wqk_int8_pallas")
+class WqkInt8PallasBackend(WqkInt8Backend):
+    """W8A8 scores through the fused Pallas kernel (kernels/wqk_score):
+    per-head W_QK resident in VMEM, raw int8 inputs streaming through —
+    the closest TPU analogue of the macro. Quadratic schedule only (the
+    kernel materializes score tiles); the planner falls back to
+    ``wqk_int8`` for blockwise execution or when D_aug exceeds VMEM."""
+    supports_blockwise = False
+    max_d_aug = VMEM_D_LIMIT
+
+    def scores(self, x_q, x_kv, sw, *, scale, rope_fn=None):
+        from repro.kernels.wqk_score import ops
+        w, x_q, x_kv = self._augmented(sw, x_q, x_kv)
+        if x_q.shape[-2] == 1:
+            # decode-shaped call: one query row would pad to a full
+            # kernel block; ops.scores_jnp shares the kernel path's
+            # quantization scheme, so the numerics stay identical
+            return ops.scores_jnp(x_q, x_kv, w) * scale
+        interpret = jax.default_backend() != "tpu"
+        return ops.scores(x_q, x_kv, w, interpret=interpret) * scale
+
+
+@register_backend("factored")
+class FactoredBackend(ScoreBackend):
+    """Rank-dh factored evaluation of the same bilinear form (== standard
+    QK^T without positional rotation). Used when D >> dh makes the
+    explicit fold FLOPs-prohibitive; mathematically identical scores."""
+    uses_x_cache = True
+
+    def scores(self, x_q, x_kv, sw, *, scale, rope_fn=None):
+        return wqk_mod.factored_scores(
+            x_q.astype(jnp.float32), x_kv.astype(jnp.float32),
+            sw.wq.astype(jnp.float32), sw.wk.astype(jnp.float32),
+            None if sw.bq is None else sw.bq.astype(jnp.float32),
+            None if sw.bk is None else sw.bk.astype(jnp.float32)) * scale
+
+    def blockwise_qk(self, sw, x_q, x_kv, *, dtype, rope_q=None, rope_k=None):
+        B = x_q.shape[0]
+        H, dh = sw.wq.shape[1], sw.wq.shape[2]
+        Hkv = sw.wk.shape[1]
+        q = jnp.einsum("bnd,dhe->bhne", x_q, sw.wq.astype(dtype))
+        k = jnp.einsum("bnd,dhe->bhne", x_kv, sw.wk.astype(dtype))
+        if sw.bq is not None:
+            q = q + sw.bq[:, None, :].astype(dtype)
+        if sw.bk is not None:
+            k = k + sw.bk[:, None, :].astype(dtype)
+        q = q.reshape(B, Hkv, H // Hkv, q.shape[-2], dh)
+        return q, k
+
+
+# ---------------------------------------------------------------- planner
+
+@dataclasses.dataclass(frozen=True)
+class ScorePlan:
+    """A resolved execution plan for one attention-score workload."""
+    backend: ScoreBackend
+    blockwise: bool                 # flash schedule vs quadratic
+    block_m: int                    # KV block for the flash schedule
+    cache_mode: str                 # kv | xv | x  (decode-cache layout)
+    reason: str = ""                # why the planner picked this
+
+    @property
+    def name(self) -> str:
+        return self.backend.name
+
+
+def _cache_mode(cfg, backend: ScoreBackend) -> str:
+    """Decode-cache layout from capability flags (DESIGN.md §4):
+    K-consuming backends cache K/V; X-consuming backends cache raw X,
+    pure-x (V recomputed) winning iff D < 2*Hkv*dh.
+
+    A cfg.cache_mode override is honoured only when the backend can
+    consume that layout — e.g. whisper-tiny pins "xv", but running it
+    with the standard backend must still get a K/V cache, or decode
+    would write K rows into a k-less cache."""
+    override = getattr(cfg, "cache_mode", None)
+    compatible = ("x", "xv") if backend.uses_x_cache else ("kv",)
+    if override and override in compatible:
+        return override
+    if not backend.uses_x_cache:
+        return "kv"
+    if cfg.d_model < 2 * cfg.num_kv_heads * cfg.head_dim:
+        return "x"
+    return "xv"
+
+
+def plan(cfg, *, seq_len: Optional[int] = None,
+         mask_kind: str = "causal",
+         device: Optional[str] = None,
+         backend: Optional[Union[str, ScoreBackend]] = None) -> ScorePlan:
+    """Pick backend + execution schedule for ``cfg``.
+
+    seq_len   : KV length of the workload (None = unknown -> quadratic)
+    mask_kind : causal | window | none (window masks force quadratic —
+                the flash path streams window arithmetic for causal/none)
+    device    : platform override ('tpu'/'cpu'/...); defaults to the
+                runtime backend. The fused Pallas kernel is only chosen
+                automatically on TPU; explicit ``wqk_int8_pallas``
+                requests run anywhere (interpret mode off-TPU).
+    backend   : explicit backend/name override (else cfg.score_mode)
+    """
+    be = get_backend(backend if backend is not None else cfg.score_mode)
+    reason = f"cfg.score_mode={cfg.score_mode!r}"
+
+    # capability substitutions -------------------------------------------
+    if not be.supports(cfg):
+        # D_aug exceeds what the backend handles: fall back inside the
+        # same family (pallas -> jnp int8) or to the factored evaluation
+        fb = "wqk_int8" if be.quantized else "factored"
+        reason += (f"; d_aug={be.d_aug(cfg)} > max_d_aug={be.max_d_aug} "
+                   f"-> {fb}")
+        be = get_backend(fb)
+    elif be is _BACKENDS["wqk"] and not getattr(cfg, "wqk_explicit", True):
+        be = get_backend("factored")
+        reason += "; wqk_explicit=False -> factored"
+    elif be is _BACKENDS["wqk_int8"]:
+        dev = device or jax.default_backend()
+        if dev == "tpu" and _BACKENDS["wqk_int8_pallas"].supports(cfg):
+            be = get_backend("wqk_int8_pallas")
+            reason += "; tpu + VMEM-resident d_aug -> fused pallas kernel"
+
+    # schedule ------------------------------------------------------------
+    min_len = getattr(cfg, "blockwise_min_len", 16384)
+    blockwise = (seq_len is not None and seq_len >= min_len
+                 and be.supports_blockwise
+                 and mask_kind in ("causal", "none"))
+    if blockwise:
+        reason += f"; seq_len={seq_len} >= {min_len} -> blockwise flash"
+    if (seq_len is not None and seq_len >= min_len
+            and not be.supports_blockwise
+            and mask_kind in ("causal", "none")):
+        # long-sequence request on a quadratic-only backend: swap to the
+        # blockwise-capable sibling so S never materializes
+        sib = get_backend("wqk_int8") if be.quantized else be
+        if sib.supports_blockwise:
+            be, blockwise = sib, True
+            reason += (f"; seq_len={seq_len} >= {min_len} "
+                       f"-> blockwise via {sib.name}")
+
+    return ScorePlan(backend=be, blockwise=blockwise,
+                     block_m=getattr(cfg, "attn_block_m", 1024),
+                     cache_mode=_cache_mode(cfg, be), reason=reason)

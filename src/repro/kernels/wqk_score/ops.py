@@ -28,6 +28,21 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
+def _quantize_workload(x_q, x_kv, wqk):
+    """The kernel's quantization scheme: per-token X, per-head W_QK.
+    Shared by the Pallas path and the jnp twin so they cannot drift."""
+    qx, sx = quant.quantize(x_q, axis=-1)
+    qy, sy = quant.quantize(x_kv, axis=-1)
+    H = wqk.shape[0]
+    qw, sw = quant.quantize(wqk.reshape(H, -1), axis=-1)
+    return qx, sx, qy, sy, qw.reshape(wqk.shape), sw.reshape(H, 1, 1)
+
+
+def _dequant(s, sx, sy, sw):
+    return s.astype(jnp.float32) * sx[..., None, :, :] \
+        * jnp.swapaxes(sy, -1, -2)[..., None, :, :] * sw
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "block_m",
                                              "interpret"))
 def scores(x_q: jax.Array, x_kv: jax.Array, wqk: jax.Array, *,
@@ -39,12 +54,7 @@ def scores(x_q: jax.Array, x_kv: jax.Array, wqk: jax.Array, *,
     Quantization: per-token on X (axis -1), per-head on W_QK.
     """
     N, M = x_q.shape[-2], x_kv.shape[-2]
-    qx, sx = quant.quantize(x_q, axis=-1)
-    qy, sy = quant.quantize(x_kv, axis=-1)
-    H = wqk.shape[0]
-    qw, sw = quant.quantize(wqk.reshape(H, -1), axis=-1)
-    qw = qw.reshape(wqk.shape)
-    sw = sw.reshape(H, 1, 1)
+    qx, sx, qy, sy, qw, sw = _quantize_workload(x_q, x_kv, wqk)
 
     qxp = _pad_to(qx, block_n, -2)
     qyp = _pad_to(qy, block_m, -2)
@@ -53,9 +63,20 @@ def scores(x_q: jax.Array, x_kv: jax.Array, wqk: jax.Array, *,
                                      block_m=block_m, interpret=interpret)
     for _ in range(x_q.ndim - 2):
         fn = jax.vmap(fn)
-    s = fn(qxp, qyp)[..., :, :N, :M].astype(jnp.float32)
-    return s * sx[..., None, :, :] * jnp.swapaxes(sy, -1, -2)[..., None, :, :] \
-        * sw
+    return _dequant(fn(qxp, qyp)[..., :, :N, :M], sx, sy, sw)
+
+
+def scores_jnp(x_q: jax.Array, x_kv: jax.Array, wqk: jax.Array) -> jax.Array:
+    """jnp twin of ``scores`` — same quantization scheme, no Pallas.
+    Used for decode-shaped (Nq=1) calls where padding to a kernel block
+    would dominate. Second contraction accumulates in f32 (int32 would
+    overflow at macro-scale D·M)."""
+    qx, sx, qy, sy, qw, sw = _quantize_workload(x_q, x_kv, wqk)
+    g = jnp.einsum("...nd,hde->...hne", qx.astype(jnp.int32),
+                   qw.astype(jnp.int32))
+    s = jnp.einsum("...hne,...me->...hnm", g.astype(jnp.float32),
+                   qy.astype(jnp.float32))
+    return _dequant(s, sx, sy, sw)
 
 
 def supported(d_aug: int) -> bool:

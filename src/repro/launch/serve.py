@@ -10,12 +10,14 @@ identical).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import numpy as np
 
 from repro.configs.base import get_arch, reduced as reduce_cfg
+from repro.core import score_backend
 from repro.models import frontends
 from repro.models.model import build_model
 from repro.serving import kvcache
@@ -32,11 +34,17 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--score-backend", default=None,
+                    help="registered ScoreBackend name (overrides the "
+                         "arch's score_mode); see score_backend.list_backends")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
+    if args.score_backend:
+        score_backend.get_backend(args.score_backend)   # validate early
+        cfg = dataclasses.replace(cfg, score_mode=args.score_backend)
     if not cfg.num_heads and cfg.family == "ssm":
         pass                                  # ssm decode is O(1)/token
     model = build_model(cfg)
@@ -48,14 +56,16 @@ def main():
                                               (params, None))
             print(f"[serve] restored step {step}")
 
-    budget = kvcache.budget_for(cfg) if cfg.num_heads else None
-    if budget:
-        print(f"[serve] cache mode {budget.mode!r}; "
-              f"{budget.bytes_per_token} B/token; "
-              f"{budget.max_tokens(16 << 30):,} tokens per 16 GB chip")
-
     eng = Engine(model, params, max_slots=args.slots,
                  max_len=args.max_len)
+    if eng.plan is not None:
+        budget = kvcache.budget_for(cfg)
+        print(f"[serve] score backend {eng.plan.backend.name!r} "
+              f"({'blockwise' if eng.plan.blockwise else 'quadratic'}); "
+              f"cache mode {budget.mode!r}; "
+              f"{budget.bytes_per_token} B/token; "
+              f"{budget.max_tokens(16 << 30):,} tokens per 16 GB chip")
+        print(f"[serve] plan: {eng.plan.reason}")
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

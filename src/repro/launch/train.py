@@ -12,6 +12,7 @@ reduced config on the host mesh — same code path, different mesh.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 
@@ -36,6 +37,9 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-sized config of the same family")
+    ap.add_argument("--score-backend", default=None,
+                    help="registered ScoreBackend name (overrides the "
+                         "arch's score_mode)")
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
     ap.add_argument("--grad-compress", action="store_true",
@@ -49,6 +53,10 @@ def main():
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
+    if args.score_backend:
+        from repro.core import score_backend
+        score_backend.get_backend(args.score_backend)   # validate early
+        cfg = dataclasses.replace(cfg, score_mode=args.score_backend)
     model = build_model(cfg)
     mesh = {"host": make_host_mesh,
             "single": lambda: make_production_mesh(multi_pod=False),

@@ -1,6 +1,10 @@
 """Attention layers: MHA/GQA, causal / sliding-window / local:global masks,
-full-sequence and cached-decode paths, with the paper's score modes plumbed
-through ``core.attention_scores``.
+full-sequence and cached-decode paths, with the paper's score paths plumbed
+through the ``core.score_backend`` registry.
+
+Which backend evaluates S — and whether the quadratic or blockwise-flash
+schedule runs — is decided by ``score_backend.plan``; this module only
+keys off capability flags (never score-mode strings).
 
 Layouts: x (B, N, D); wq (D, H, dh); wk/wv (D, Hkv, dh); wo (H, dh, D).
 Head axes shard over the "model" mesh axis; D over "data" (FSDP).
@@ -13,7 +17,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.attention_scores import ScoreWeights, compute_scores
+from repro.core import score_backend as sb
+from repro.core.score_backend import ScoreWeights
 from repro.models import layers
 
 NEG_INF = -1e30
@@ -72,26 +77,30 @@ def attention_full(p: dict, x_q: jax.Array, x_kv: jax.Array, cfg, *,
                    positions_q: jax.Array, positions_kv: jax.Array,
                    mask_kind: str = "causal",
                    window: Optional[jax.Array] = None,
-                   score_mode: Optional[str] = None) -> jax.Array:
-    """Full-sequence attention (training / prefill). -> (..., Nq, D)."""
-    mode = score_mode or cfg.score_mode
-    # long sequences: blockwise online-softmax path (the flash_scores
-    # schedule in portable jnp — S never materializes). Inference-side
-    # (prefill) only; train_4k stays on the quadratic+remat path.
-    min_len = getattr(cfg, "blockwise_min_len", 16384)
-    if (x_kv.shape[-2] >= min_len and mask_kind in ("causal", "none")
-            and positions_q.ndim == 1):
+                   backend=None) -> jax.Array:
+    """Full-sequence attention (training / prefill). -> (..., Nq, D).
+
+    The planner picks the backend and the schedule: long sequences take
+    the blockwise online-softmax path (flash schedule in portable jnp —
+    S never materializes) when the backend supports it; per-batch 2-D
+    positions force the quadratic path (the shared flash K-stream needs
+    1-D positions)."""
+    plan = sb.plan(cfg, backend=backend,
+                   seq_len=x_kv.shape[-2] if positions_q.ndim == 1 else None,
+                   mask_kind=mask_kind)
+    be = plan.backend
+    if plan.blockwise:
         return _attention_full_blockwise(
             p, x_q, x_kv, cfg, positions_q=positions_q,
             positions_kv=positions_kv, mask_kind=mask_kind,
-            window=window, mode=mode)
+            window=window, plan=plan)
     H, dh = cfg.num_heads, cfg.head_dim
     scale = 1.0 / math.sqrt(dh)
     rope_fn = None
-    if cfg.pos_emb == "rope" and mode == "standard":
+    if cfg.pos_emb == "rope" and be.needs_rope:
         rope_fn = lambda t, which: layers.apply_rope(
             t, positions_q if which == "q" else positions_kv, cfg.rope_theta)
-    s = compute_scores(mode, x_q, x_kv, score_weights(p), scale, rope_fn)
+    s = be.scores(x_q, x_kv, score_weights(p), scale=scale, rope_fn=rope_fn)
     if cfg.logit_softcap:
         s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
     bias = _mask_bias(positions_q, positions_kv, mask_kind, window)
@@ -124,61 +133,28 @@ def _blockwise_core(q, k, v, pos_q, pos_k, valid_k, *, scale, causal,
 
 
 def _attention_full_blockwise(p, x_q, x_kv, cfg, *, positions_q,
-                              positions_kv, mask_kind, window, mode):
-    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+                              positions_kv, mask_kind, window, plan):
+    dh = cfg.head_dim
     scale = 1.0 / math.sqrt(dh)
     dt = x_q.dtype
-    B = x_q.shape[0] if x_q.ndim == 3 else 1
     xq3 = x_q if x_q.ndim == 3 else x_q[None]
     xk3 = x_kv if x_kv.ndim == 3 else x_kv[None]
     causal = mask_kind == "causal"
-    block_m = getattr(cfg, "attn_block_m", 1024)
     valid = jnp.ones((xk3.shape[-2],), bool)
 
     v = jnp.einsum("bnd,dhe->bhne", xk3, p["wv"].astype(dt))
     if "bv" in p:
         v = v + p["bv"][:, None, :].astype(dt)
 
-    if mode == "standard":
-        q = jnp.einsum("bnd,dhe->bhne", xq3, p["wq"].astype(dt))
-        k = jnp.einsum("bnd,dhe->bhne", xk3, p["wk"].astype(dt))
-        if "bq" in p:
-            q = q + p["bq"][:, None, :].astype(dt)
-        if "bk" in p:
-            k = k + p["bk"][:, None, :].astype(dt)
-        if cfg.pos_emb == "rope":
-            q = layers.apply_rope(q, positions_q, cfg.rope_theta)
-            k = layers.apply_rope(k, positions_kv, cfg.rope_theta)
-        q = q.reshape(B, Hkv, H // Hkv, q.shape[-2], dh)
-        o = _blockwise_core(q, k, v, positions_q, positions_kv, valid,
-                            scale=scale, causal=causal, window=window,
-                            softcap=cfg.logit_softcap, block_m=block_m)
-    else:
-        from repro.core import wqk as wqk_mod
-        sw = score_weights(p)
-        w = sw.wqk if sw.wqk is not None else wqk_mod.fold_wqk(
-            sw.wq, sw.wk, sw.bq, sw.bk)
-        xq_s, xk_s = xq3, xk3
-        if w.shape[-1] == xq3.shape[-1] + 1:
-            xq_s = wqk_mod.augment_ones(xq3)
-            xk_s = wqk_mod.augment_ones(xk3)
-        if mode == "wqk_int8":
-            # fake-quant (quantize->dequantize) reproduces the W8A8
-            # numerics blockwise without materializing int32 scores
-            from repro.core import quant
-            qg, sg = quant.quantize(xq_s, axis=-1)
-            xq_s = (qg.astype(jnp.float32) * sg).astype(xq_s.dtype)
-            qk_, sk_ = quant.quantize(xk_s, axis=-1)
-            xk_s = (qk_.astype(jnp.float32) * sk_).astype(xk_s.dtype)
-            qw, sw_ = quant.quantize_per_tensor(w)
-            w = (qw.astype(jnp.float32) * sw_).astype(w.dtype)
-        g = jnp.einsum("bnd,hde->bhne", xq_s.astype(jnp.float32),
-                       w.astype(jnp.float32)).astype(dt)
-        q = g[:, None]                                  # Gs=1, Rs=H
-        k = xk_s[:, None]                               # shared raw-X stream
-        o = _blockwise_core(q, k, v, positions_q, positions_kv, valid,
-                            scale=scale, causal=causal, window=window,
-                            softcap=cfg.logit_softcap, block_m=block_m)
+    rope_q = rope_k = None
+    if cfg.pos_emb == "rope" and plan.backend.needs_rope:
+        rope_q = lambda t: layers.apply_rope(t, positions_q, cfg.rope_theta)
+        rope_k = lambda t: layers.apply_rope(t, positions_kv, cfg.rope_theta)
+    q, k = plan.backend.blockwise_qk(score_weights(p), xq3, xk3, dtype=dt,
+                                     rope_q=rope_q, rope_k=rope_k)
+    o = _blockwise_core(q, k, v, positions_q, positions_kv, valid,
+                        scale=scale, causal=causal, window=window,
+                        softcap=cfg.logit_softcap, block_m=plan.block_m)
     out = jnp.einsum("bhne,hed->bnd", o.astype(dt), p["wo"].astype(dt))
     return out if x_q.ndim == 3 else out[0]
 
@@ -200,15 +176,9 @@ class KVCache(NamedTuple):
 
 
 def cache_mode_for(cfg) -> str:
-    """kv: standard; xv: X-cache scores + V-cache; x: X only (V recomputed)."""
-    if getattr(cfg, "cache_mode", None):
-        return cfg.cache_mode
-    if cfg.score_mode == "standard":
-        return "kv"
-    # X-only cache wins memory iff D < 2*Hkv*dh (DESIGN.md §4)
-    if cfg.d_model < 2 * cfg.num_kv_heads * cfg.head_dim:
-        return "x"
-    return "xv"
+    """kv: K-consuming backends; xv: X-cache scores + V-cache; x: X only
+    (V recomputed). Delegates to the planner (capability-flag keyed)."""
+    return sb.plan(cfg).cache_mode
 
 
 def init_kv_cache(cfg, batch: int, max_len: int, dtype,
@@ -308,10 +278,13 @@ def _update_at(cache: jax.Array, new: jax.Array,
 def attention_decode(p: dict, x_new: jax.Array, cache: KVCache,
                      pos: jax.Array, cfg, *,
                      window: Optional[int] = None,
-                     score_mode: Optional[str] = None):
+                     backend=None):
     """One decode step. x_new (B, 1, D); pos (B,) current index.
-    Returns (out (B, 1, D), new_cache)."""
-    mode = score_mode or cfg.score_mode
+    Returns (out (B, 1, D), new_cache). The cache layout follows the
+    backend's ``uses_x_cache`` capability flag: K-consuming backends
+    cache rope'd K rows; X-consuming backends (the paper's dataflow)
+    cache raw inputs and stream them through the stationary weights."""
+    be = sb.plan(cfg, backend=backend).backend
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     scale = 1.0 / math.sqrt(dh)
     B, _, D = x_new.shape
@@ -319,7 +292,7 @@ def attention_decode(p: dict, x_new: jax.Array, cache: KVCache,
             (cache.x if cache.x is not None else cache.v)).shape[1]
     dt = x_new.dtype
 
-    if mode == "standard":
+    if not be.uses_x_cache:
         q = jnp.einsum("bnd,dhe->bhne", x_new, p["wq"].astype(dt))
         k_new = jnp.einsum("bnd,dhe->bnhe", x_new, p["wk"].astype(dt))
         v_new = jnp.einsum("bnd,dhe->bnhe", x_new, p["wv"].astype(dt))
@@ -327,7 +300,7 @@ def attention_decode(p: dict, x_new: jax.Array, cache: KVCache,
             q = q + p["bq"][:, None, :].astype(dt)
             k_new = k_new + p["bk"][None, None].astype(dt)
             v_new = v_new + p["bv"][None, None].astype(dt)
-        if cfg.pos_emb == "rope":
+        if cfg.pos_emb == "rope" and be.needs_rope:
             q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
             k_new = layers.apply_rope(
                 k_new.swapaxes(1, 2), pos[:, None], cfg.rope_theta
@@ -340,7 +313,7 @@ def attention_decode(p: dict, x_new: jax.Array, cache: KVCache,
     else:
         new_cache = write_x(cache, x_new, cfg, pos=pos)
         x_cache = read_x(new_cache, dt)
-        s = compute_scores(mode, x_new, x_cache, score_weights(p), scale)
+        s = be.scores(x_new, x_cache, score_weights(p), scale=scale)
         if cache.v is None:
             v_all = jnp.einsum("bsd,dhe->bshe", x_cache, p["wv"].astype(dt))
             if "bv" in p:
@@ -360,7 +333,7 @@ def attention_decode(p: dict, x_new: jax.Array, cache: KVCache,
     s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
     a = jax.nn.softmax(s, axis=-1).astype(dt)
 
-    if mode == "standard" or cache.v is not None:
+    if not be.uses_x_cache or cache.v is not None:
         _, v_src = read_kv(new_cache, dt)
     else:
         v_src = v_all

@@ -494,9 +494,10 @@ def _cross_decode(p, x_new, cross, cfg, cache, mode):
                        ck.astype(jnp.float32)).reshape(B, H, 1, S) * scale
     else:
         (cv,) = cross
-        from repro.core.attention_scores import compute_scores
-        sw = attn.score_weights(p)
-        s = compute_scores(cfg.score_mode, x_new, cache["enc_out"], sw, scale)
+        from repro.core import score_backend as sb
+        be = sb.plan(cfg).backend
+        s = be.scores(x_new, cache["enc_out"], attn.score_weights(p),
+                      scale=scale)
         B, S = s.shape[0], s.shape[-1]
     valid = jnp.arange(S)[None, :] < enc_len[:, None]    # (B, S)
     s = s + jnp.where(valid, 0.0, attn.NEG_INF)[:, None, None, :]

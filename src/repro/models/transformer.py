@@ -94,7 +94,7 @@ def uniform_stack(params, x: jax.Array, cfg, *, positions: jax.Array,
             xa = attn.attention_full(
                 p["xattn"], hx, enc_out, _with_theta(cfg, th),
                 positions_q=positions, positions_kv=enc_positions,
-                mask_kind="none", score_mode=cfg.score_mode)
+                mask_kind="none")
             h = h + xa
         hn2 = layers.norm(h, p["ln2"], cfg.norm)
         if "moe" in p:

@@ -48,6 +48,12 @@ class Engine:
         self.model, self.params = model, params
         self.max_slots, self.max_len = max_slots, max_len
         cfg = model.cfg
+        # the resolved score plan for this deployment: which backend
+        # evaluates S, its schedule, and the cache layout it dictates
+        self.plan = None
+        if getattr(cfg, "num_heads", 0):
+            from repro.core import score_backend as sb
+            self.plan = sb.plan(cfg, seq_len=max_len)
         self.cache = model.init_cache(max_slots, max_len)
         self.pos = np.zeros(max_slots, np.int32)          # next position
         self.last_tok = np.zeros(max_slots, np.int32)

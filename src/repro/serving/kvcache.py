@@ -1,8 +1,9 @@
 """Decode-cache management + the paper-derived X-cache accounting.
 
 The cache *tensors* live in models/attention.py (KVCache with k/v/x
-fields, selected by ``cache_mode_for(cfg)``). This module owns what the
-serving engine needs around them:
+fields); the layout is chosen by ``core.score_backend.plan`` from the
+score backend's capability flags. This module owns what the serving
+engine needs around them:
 
   * **bytes-per-token accounting** for each cache mode — the quantity the
     paper's weight-stationary dataflow optimizes. Standard KV caching
@@ -24,10 +25,11 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class CacheBudget:
-    mode: str                 # kv | xv | x
+    mode: str                 # kv | xv | x (cache layout)
     bytes_per_token_layer: int
     layers: int
     dtype_bytes: int = 2
+    backend: str = ""         # ScoreBackend that dictated the layout
 
     @property
     def bytes_per_token(self) -> int:
@@ -38,16 +40,18 @@ class CacheBudget:
 
 
 def budget_for(cfg, dtype_bytes: int = 2) -> CacheBudget:
-    """Per-token cache bytes for cfg's cache mode (attention layers)."""
-    from repro.models.attention import cache_mode_for
-    mode = cache_mode_for(cfg)
-    kv_row = 2 * cfg.num_kv_heads * cfg.head_dim
-    x_row = cfg.d_model
-    per_layer = {"kv": kv_row, "xv": x_row + kv_row // 2, "x": x_row}[mode]
+    """Per-token cache bytes for cfg — the layout comes from the planned
+    score backend's capability flags (``uses_x_cache``), the sizing from
+    its ``memory_bytes_per_token``."""
+    from repro.core.score_backend import plan
+    pl = plan(cfg)
+    per_layer = pl.backend.memory_bytes_per_token(
+        cfg, dtype_bytes, cache_mode=pl.cache_mode)
     n_attn = len(cfg.attn_layer_indices) if cfg.num_heads else 0
-    return CacheBudget(mode=mode,
-                       bytes_per_token_layer=per_layer * dtype_bytes,
-                       layers=max(n_attn, 1), dtype_bytes=dtype_bytes)
+    return CacheBudget(mode=pl.cache_mode,
+                       bytes_per_token_layer=per_layer,
+                       layers=max(n_attn, 1), dtype_bytes=dtype_bytes,
+                       backend=pl.backend.name)
 
 
 def compare_modes(cfg, dtype_bytes: int = 2) -> Dict[str, int]:

@@ -1,0 +1,70 @@
+"""Tiny deterministic stand-in for ``hypothesis``.
+
+Used when the real package is absent (the CI container does not ship
+it) so property-based tests still *run* — over a fixed pseudo-random
+sample of the strategy space instead of hypothesis' adaptive search.
+Only the surface this suite uses is implemented: ``given`` (positional
+or keyword strategies), ``settings(max_examples=..., deadline=...)``,
+and ``strategies.integers/floats/text``.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+
+FALLBACK_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: min_value + (max_value - min_value) * rng.random())
+
+    @staticmethod
+    def text(alphabet=None, min_size=0, max_size=10):
+        chars = alphabet or [chr(c) for c in range(32, 0x2FF)]
+
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return "".join(rng.choice(chars) for _ in range(n))
+        return _Strategy(draw)
+
+
+def settings(max_examples=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_fallback_max_examples", None)
+                    or FALLBACK_MAX_EXAMPLES, FALLBACK_MAX_EXAMPLES)
+            rng = random.Random(1234)
+            for _ in range(n):
+                pos = tuple(s.draw(rng) for s in arg_strats)
+                kw = {k: s.draw(rng) for k, s in kw_strats.items()}
+                fn(*args, *pos, **kw, **kwargs)
+        # copy identity but NOT the signature: pytest must not mistake
+        # the strategy parameters for fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

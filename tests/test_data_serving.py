@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # CI container has no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs.base import get_arch, reduced
 from repro.data import pipeline, tokenizer

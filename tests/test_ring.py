@@ -14,8 +14,8 @@ from jax.sharding import Mesh
 from repro.sharding.ring import ring_attention, ring_attention_wqk
 from repro.kernels.flash_scores import ref as flash_ref
 
-mesh = jax.make_mesh((4,), ("sp",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("sp",))
 rng = np.random.default_rng(0)
 H, N, E, dv = 4, 64, 16, 16
 q = jnp.asarray(rng.standard_normal((H, N, E)), jnp.float32)

@@ -90,8 +90,8 @@ def test_param_shardings_on_tree():
     cfg = reduced(get_arch("qwen2.5-14b"))
     model = build_model(cfg)
     sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     sh = specs.param_shardings(sds, mesh)
     leaves = jax.tree_util.tree_leaves(
         sh, is_leaf=lambda x: hasattr(x, "spec"))
@@ -109,8 +109,8 @@ from repro.train.trainer import Trainer, TrainConfig
 
 cfg = reduced(get_arch("qwen2.5-14b"), num_layers=2)
 model = build_model(cfg)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
 tc = TrainConfig(total_steps=4, warmup_steps=1, log_every=100,
                  ckpt_every=100)
