@@ -1,0 +1,123 @@
+"""Bench-regression gate: fail CI when a score-backend sweep latency
+regresses vs the committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline BENCH_baseline.json --current BENCH_scores.json
+
+CI runners and dev machines differ wildly in absolute speed, so the
+default comparison is **machine-normalized**: each backend's
+``seconds_per_call`` is divided by the same run's ``standard`` backend
+latency, and the *ratio* is compared across runs. A backend whose
+normalized latency exceeds baseline by more than ``--threshold``
+(default 25%) fails the gate — that catches "someone made wqk_int8 2x
+slower relative to everything else" without flaking on slow runners.
+
+Normalization is blind to regressions in the reference itself (and to
+uniform across-the-board slowdowns): ``standard``/``standard`` is 1.0
+in every run. As a backstop, the reference's *raw* latency is also
+compared, with a deliberately loose ``--ref-threshold`` (default 10x —
+cross-machine absolute speeds legitimately differ severalfold, so only
+order-of-magnitude reference regressions are actionable from CI).
+``--absolute`` compares raw seconds for every backend instead
+(same-machine trend runs, where tight absolute checks are meaningful).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REFERENCE = "standard"        # normalization denominator
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)["backends"]
+
+
+def _normalized(rows: dict, absolute: bool) -> dict:
+    if absolute:
+        return {k: r["seconds_per_call"] for k, r in rows.items()}
+    ref = rows[REFERENCE]["seconds_per_call"] or 1e-12
+    return {k: r["seconds_per_call"] / ref for k, r in rows.items()}
+
+
+def check(baseline: dict, current: dict, threshold: float,
+          absolute: bool, ref_threshold: float = 10.0) -> list:
+    failures = []
+    if not absolute:
+        # the unit decision must be made once for BOTH files — a missing
+        # reference in one would silently compare seconds against ratios
+        missing = [lbl for lbl, rows in (("baseline", baseline),
+                                         ("current", current))
+                   if REFERENCE not in rows]
+        if missing:
+            return [f"reference backend {REFERENCE!r} missing from "
+                    f"{' and '.join(missing)} — cannot normalize; re-run "
+                    f"the sweep or pass --absolute"]
+        b_ref = baseline[REFERENCE]["seconds_per_call"]
+        c_ref = current[REFERENCE]["seconds_per_call"]
+        rr = c_ref / b_ref if b_ref > 0 else float("inf")
+        print(f"  reference {REFERENCE!r} raw: {b_ref:.4g}s -> "
+              f"{c_ref:.4g}s ({rr:.2f}x; backstop limit "
+              f"{ref_threshold:.0f}x)")
+        if rr > ref_threshold:
+            failures.append(
+                f"{REFERENCE} (reference, raw seconds): {c_ref:.4g}s vs "
+                f"baseline {b_ref:.4g}s ({rr:.2f}x > {ref_threshold:.0f}x "
+                f"backstop — normalization cannot see this)")
+    base = _normalized(baseline, absolute)
+    cur = _normalized(current, absolute)
+    unit = "s" if absolute else "x standard"
+    for name in sorted(base):
+        if name not in cur:
+            failures.append(f"{name}: present in baseline, missing from "
+                            f"current sweep")
+            continue
+        b, c = base[name], cur[name]
+        ratio = c / b if b > 0 else float("inf")
+        status = "FAIL" if ratio > 1.0 + threshold else "ok"
+        print(f"  [{status:4s}] {name:18s} baseline {b:10.4g} {unit:>10s}"
+              f" -> current {c:10.4g} ({ratio:5.2f}x)")
+        if status == "FAIL":
+            failures.append(
+                f"{name}: {c:.4g} vs baseline {b:.4g} {unit} "
+                f"({ratio:.2f}x > {1.0 + threshold:.2f}x allowed)")
+    for name in sorted(set(cur) - set(base)):
+        print(f"  [new ] {name:18s} {cur[name]:10.4g} {unit} (no baseline)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--current", default="BENCH_scores.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional latency regression (0.25 = "
+                         "25%%)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw seconds instead of "
+                         "standard-normalized ratios")
+    ap.add_argument("--ref-threshold", type=float, default=10.0,
+                    help="allowed raw-latency factor for the reference "
+                         "backend (backstop for the normalization blind "
+                         "spot; loose because machines differ)")
+    args = ap.parse_args(argv)
+
+    mode = "absolute" if args.absolute else f"normalized to {REFERENCE!r}"
+    print(f"bench-regression gate ({mode}, threshold "
+          f"{args.threshold:.0%}):")
+    failures = check(_load(args.baseline), _load(args.current),
+                     args.threshold, args.absolute,
+                     ref_threshold=args.ref_threshold)
+    if failures:
+        print(f"\nREGRESSION: {len(failures)} backend(s) over threshold")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nno regressions vs baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,8 @@ from repro.core.score_backend import ScoreWeights
 
 # whisper-tiny decoder geometry: absolute pos-emb, the fold's home turf
 N, D, H, Hkv, DH = 256, 384, 6, 6, 64
-REPEATS = 3
+REPEATS = 10      # timed samples; min is reported
+INNER = 4         # calls per sample (amortizes dispatch overhead)
 
 
 def _workload(rng):
@@ -35,16 +36,22 @@ def _workload(rng):
 
 
 def _time_backend(be, sw, x) -> float:
-    """Median seconds per score call (jitted, post-warmup)."""
+    """Min seconds per score call over REPEATS samples (jitted,
+    post-warmup; each sample times INNER back-to-back calls). Min-of-k
+    because the regression gate normalizes every row by 'standard' —
+    a scheduler hiccup in the denominator would shift every ratio."""
     folded = be.fold(sw)
     fn = jax.jit(lambda a, b: be.scores(a, b, folded, scale=DH ** -0.5))
     fn(x, x).block_until_ready()                     # compile
+    fn(x, x).block_until_ready()                     # warm caches
     ts = []
     for _ in range(REPEATS):
         t0 = time.perf_counter()
-        fn(x, x).block_until_ready()
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+        for _ in range(INNER):
+            out = fn(x, x)
+        out.block_until_ready()
+        ts.append((time.perf_counter() - t0) / INNER)
+    return float(min(ts))
 
 
 def sweep() -> dict:

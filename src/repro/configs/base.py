@@ -12,7 +12,8 @@ from typing import Callable, Optional, Sequence
 
 # ---------------------------------------------------------------------------
 # Score backends: the paper's technique as a first-class feature.
-# ``score_mode`` names a backend in the core.score_backend registry:
+# ``score_mode`` names a backend in the core.score_backend registry
+# (``score_backend.list_backends()`` is the canonical enumeration):
 #   standard        - S = (X W_Q)(X W_K)^T                (baseline)
 #   wqk             - S = X W_QK X^T, W_QK folded         (paper, float)
 #   wqk_int8        - W8A8 integer scores via folded W_QK (paper, TPU-native
@@ -22,9 +23,6 @@ from typing import Callable, Optional, Sequence
 # The planner (score_backend.plan) may substitute within capability
 # limits (e.g. wqk_int8 -> the Pallas kernel on TPU when D_aug fits
 # VMEM). RoPE archs get NoPE arithmetic on wqk*/factored (DESIGN.md §4).
-# SCORE_MODES is a deprecated static snapshot kept one release; the
-# registry (score_backend.list_backends()) is canonical.
-SCORE_MODES = ("standard", "wqk", "wqk_int8", "wqk_int8_pallas", "factored")
 
 
 @dataclass(frozen=True)

@@ -50,8 +50,7 @@ VMEM_D_LIMIT = 2048
 
 
 class ScoreWeights(NamedTuple):
-    """The raw score-side weights of one attention layer (canonical home;
-    re-exported by core.attention_scores for back-compat)."""
+    """The raw score-side weights of one attention layer."""
     wq: jax.Array                       # (D, H, dh)
     wk: jax.Array                       # (D, Hkv, dh)
     bq: Optional[jax.Array] = None      # (H, dh)

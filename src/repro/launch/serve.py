@@ -25,6 +25,16 @@ from repro.serving.engine import Engine, Request
 from repro.train import checkpoint as ckpt_lib
 
 
+def parse_bytes(s: str) -> int:
+    """'512MB', '1.5GiB', '2g', or a raw byte count."""
+    t = s.strip().lower().rstrip("ib")
+    for suf, mul in (("k", 1 << 10), ("m", 1 << 20), ("g", 1 << 30),
+                     ("t", 1 << 40)):
+        if t.endswith(suf):
+            return int(float(t[:-1]) * mul)
+    return int(float(t))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -37,6 +47,22 @@ def main():
     ap.add_argument("--score-backend", default=None,
                     help="registered ScoreBackend name (overrides the "
                          "arch's score_mode); see score_backend.list_backends")
+    ap.add_argument("--paged", dest="paged", default=None,
+                    action="store_true",
+                    help="paged block-table cache (default: auto — on for "
+                         "families the paged engine supports)")
+    ap.add_argument("--dense", dest="paged", action="store_false",
+                    help="force the dense [slots, max_len] cache pool")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per cache block (paged mode)")
+    ap.add_argument("--hbm-budget", default=None,
+                    help="decode-cache HBM budget, e.g. '512MB' or '4GiB'; "
+                         "paged mode sizes the block pool from it "
+                         "(PagedCacheBudget.max_blocks)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill chunk size (default 4x block)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable copy-on-write prompt-prefix block sharing")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -56,8 +82,12 @@ def main():
                                               (params, None))
             print(f"[serve] restored step {step}")
 
+    hbm = parse_bytes(args.hbm_budget) if args.hbm_budget else None
     eng = Engine(model, params, max_slots=args.slots,
-                 max_len=args.max_len)
+                 max_len=args.max_len, paged=args.paged,
+                 block_size=args.block_size, hbm_bytes=hbm,
+                 prefill_chunk=args.prefill_chunk,
+                 prefix_sharing=not args.no_prefix_sharing)
     if eng.plan is not None:
         budget = kvcache.budget_for(cfg)
         print(f"[serve] score backend {eng.plan.backend.name!r} "
@@ -66,6 +96,16 @@ def main():
               f"{budget.bytes_per_token} B/token; "
               f"{budget.max_tokens(16 << 30):,} tokens per 16 GB chip")
         print(f"[serve] plan: {eng.plan.reason}")
+    if eng.paged:
+        pb = kvcache.paged_budget_for(cfg, args.block_size)
+        print(f"[serve] paged cache: {eng.allocator.num_usable} usable "
+              f"blocks x {args.block_size} tokens "
+              f"({pb.bytes_per_block} B/block); chunked prefill "
+              f"C={eng.prefill_chunk}; prefix sharing "
+              f"{'on' if eng.prefix_sharing else 'off'}")
+    else:
+        print("[serve] dense cache pool "
+              f"[{args.slots} slots x {args.max_len} tokens]")
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

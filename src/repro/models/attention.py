@@ -275,6 +275,190 @@ def _update_at(cache: jax.Array, new: jax.Array,
     return jax.vmap(upd)(cache, new, pos)
 
 
+# ----------------------------------------------------- paged decode cache
+
+def gather_block_view(pool: KVCache, tables: jax.Array) -> KVCache:
+    """Materialize per-sequence contiguous cache views from a block pool.
+
+    pool leaves (NB, BS, ...): physical block id x offset-in-block.
+    tables (B, nbk) int32: logical block i of sequence b lives in
+    physical block tables[b, i]. Returns a KVCache whose leaves are
+    (B, nbk*BS, ...) — logical-position order, so every dense decode
+    formula (masks, scores, value gathers) applies unchanged.
+    """
+    B = tables.shape[0]
+
+    def g(leaf):
+        v = jnp.take(leaf, tables, axis=0)          # (B, nbk, BS, ...)
+        return v.reshape((B, -1) + leaf.shape[2:])
+    return jax.tree_util.tree_map(g, pool)
+
+
+def _scatter_rows(leaf: jax.Array, rows: jax.Array, bids: jax.Array,
+                  offs: jax.Array) -> jax.Array:
+    """leaf (NB, BS, ...) <- rows (B, n, ...) at physical (bids, offs),
+    both (B, n). The engine guarantees distinct (bid, off) pairs across
+    live rows (blocks are exclusively owned for writing); padding rows
+    all target the null block, where last-write-wins is harmless."""
+    return leaf.at[bids, offs].set(rows.astype(leaf.dtype))
+
+
+def paged_write_x(pool: KVCache, x_new: jax.Array, bids: jax.Array,
+                  offs: jax.Array) -> KVCache:
+    """Scatter raw-input rows (B, n, D) into the pooled X-cache,
+    int8-quantizing exactly like ``write_x`` when the pool is int8."""
+    if pool.xs is not None:
+        from repro.core import quant
+        q, s = quant.quantize(x_new, axis=-1)
+        return pool._replace(x=_scatter_rows(pool.x, q, bids, offs),
+                             xs=_scatter_rows(pool.xs, s, bids, offs))
+    return pool._replace(x=_scatter_rows(pool.x, x_new, bids, offs))
+
+
+def paged_write_kv(pool: KVCache, k_new, v_new, bids: jax.Array,
+                   offs: jax.Array) -> KVCache:
+    """Scatter K/V rows (B, n, Hkv, dh) into the pooled cache (int8
+    per-(token, head) quantization mirrors ``write_kv``)."""
+    q8 = pool.ks is not None
+    if q8:
+        from repro.core import quant
+        if k_new is not None:
+            k_new, ks = quant.quantize(k_new, axis=-1)
+        if v_new is not None:
+            v_new, vs = quant.quantize(v_new, axis=-1)
+    if k_new is not None:
+        pool = pool._replace(k=_scatter_rows(pool.k, k_new, bids, offs))
+        if q8:
+            pool = pool._replace(ks=_scatter_rows(pool.ks, ks, bids, offs))
+    if v_new is not None:
+        pool = pool._replace(v=_scatter_rows(pool.v, v_new, bids, offs))
+        if q8:
+            pool = pool._replace(vs=_scatter_rows(pool.vs, vs, bids, offs))
+    return pool
+
+
+def _decode_qkv(p: dict, x_new: jax.Array, cfg, be, qpos: jax.Array):
+    """Q/K/V projections (+bias, +RoPE at qpos) for n new tokens.
+    q (B, H, n, dh); k_new/v_new (B, n, Hkv, dh) — token-major, ready
+    for a cache write. Used only by K-consuming backends."""
+    dt = x_new.dtype
+    q = jnp.einsum("bnd,dhe->bhne", x_new, p["wq"].astype(dt))
+    k_new = jnp.einsum("bnd,dhe->bnhe", x_new, p["wk"].astype(dt))
+    v_new = _project_v_rows(p, x_new)
+    if "bq" in p:
+        q = q + p["bq"][:, None, :].astype(dt)
+        k_new = k_new + p["bk"][None, None].astype(dt)
+    if cfg.pos_emb == "rope" and be.needs_rope:
+        q = layers.apply_rope(q, qpos, cfg.rope_theta)
+        k_new = layers.apply_rope(
+            k_new.swapaxes(1, 2), qpos, cfg.rope_theta).swapaxes(1, 2)
+    return q, k_new, v_new
+
+
+def _project_v_rows(p: dict, x: jax.Array) -> jax.Array:
+    """V rows for cache writes: (B, n, D) -> (B, n, Hkv, dh)."""
+    v = jnp.einsum("bnd,dhe->bnhe", x, p["wv"].astype(x.dtype))
+    if "bv" in p:
+        v = v + p["bv"][None, None].astype(v.dtype)
+    return v
+
+
+def _decode_attend(p: dict, x_new: jax.Array, q, view: KVCache,
+                   qpos: jax.Array, cfg, be,
+                   window: Optional[int]) -> jax.Array:
+    """Attention math shared by the dense and paged decode paths.
+
+    view: the post-write cache in logical-position order — the dense
+    cache itself, or ``gather_block_view`` of the paged pool. q is the
+    pre-projected query (K-consuming backends) or None (X-consuming
+    backends score straight from x_new). qpos (B, n) are the query
+    positions; every query attends cache positions <= its own, so
+    chunked prefill (n=C) and decode ticks (n=1) are the same graph.
+    """
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(dh)
+    B, n, _ = x_new.shape
+    dt = x_new.dtype
+    leaf = view.k if view.k is not None else (
+        view.x if view.x is not None else view.v)
+    S = leaf.shape[1]
+
+    if not be.uses_x_cache:
+        k_cache, v_src = read_kv(view, dt)
+        qg = q.reshape(B, Hkv, H // Hkv, n, dh)
+        s = jnp.einsum("bgrne,bsge->bgrns", qg.astype(jnp.float32),
+                       k_cache.astype(jnp.float32)).reshape(B, H, n, S) * scale
+    else:
+        x_cache = read_x(view, dt)
+        s = be.scores(x_new, x_cache, score_weights(p), scale=scale)
+        if view.v is not None:
+            _, v_src = read_kv(view, dt)
+        else:                       # pure-X: V recomputed from the cache
+            v_src = jnp.einsum("bsd,dhe->bshe", x_cache, p["wv"].astype(dt))
+            if "bv" in p:
+                v_src = v_src + p["bv"][None, None].astype(dt)
+
+    if cfg.logit_softcap:
+        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+    idx = jnp.arange(S)[None, None, :]                    # (1, 1, S)
+    ok = idx <= qpos[:, :, None]
+    if window is not None:
+        ok = ok & (idx > qpos[:, :, None] - window)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, :, :]
+    a = jax.nn.softmax(s, axis=-1).astype(dt)
+
+    ag = a.reshape(B, Hkv, H // Hkv, n, S)
+    o = jnp.einsum("bgrns,bsge->bgrne", ag,
+                   v_src.astype(dt)).reshape(B, H, n, dh)
+    return jnp.einsum("bhne,hed->bnd", o, p["wo"].astype(dt))
+
+
+def attention_decode_paged(p: dict, x_new: jax.Array, pool: KVCache,
+                           tables: jax.Array, pos: jax.Array, cfg, *,
+                           window: Optional[int] = None,
+                           backend=None):
+    """Decode/chunked-prefill attention through a paged cache.
+
+    x_new (B, n, D): n new tokens per sequence at positions
+    pos..pos+n-1 (n = prefill chunk size, or 1 for a decode tick).
+    pool: KVCache with (NB, BS, ...) leaves; tables (B, nbk) int32.
+    Returns (out (B, n, D), new_pool).
+
+    Writes go first (scatter at the new positions' physical slots),
+    then the view is gathered, so each query attends positions
+    <= its own — identically to the dense path. Positions beyond the
+    view (chunk padding past the table) write to the null block and are
+    never read back.
+    """
+    from repro.serving.paged import NULL_BLOCK
+    be = sb.plan(cfg, backend=backend).backend
+    B, n, _ = x_new.shape
+    leaf = pool.k if pool.k is not None else (
+        pool.x if pool.x is not None else pool.v)
+    BS = leaf.shape[1]
+    nbk = tables.shape[1]
+    S = nbk * BS
+
+    qpos = pos[:, None] + jnp.arange(n)[None, :]          # (B, n)
+    bidx = jnp.minimum(qpos // BS, nbk - 1)
+    bids = jnp.take_along_axis(tables, bidx, axis=1)
+    bids = jnp.where(qpos < S, bids, NULL_BLOCK)          # pad -> trash
+    offs = qpos % BS
+
+    if not be.uses_x_cache:
+        q, k_new, v_new = _decode_qkv(p, x_new, cfg, be, qpos)
+        new_pool = paged_write_kv(pool, k_new, v_new, bids, offs)
+    else:
+        q = None
+        new_pool = paged_write_x(pool, x_new, bids, offs)
+        if pool.v is not None:
+            new_pool = paged_write_kv(new_pool, None, _project_v_rows(
+                p, x_new), bids, offs)
+    view = gather_block_view(new_pool, tables)
+    out = _decode_attend(p, x_new, q, view, qpos, cfg, be, window)
+    return out, new_pool
+
+
 def attention_decode(p: dict, x_new: jax.Array, cache: KVCache,
                      pos: jax.Array, cfg, *,
                      window: Optional[int] = None,
@@ -285,59 +469,16 @@ def attention_decode(p: dict, x_new: jax.Array, cache: KVCache,
     cache rope'd K rows; X-consuming backends (the paper's dataflow)
     cache raw inputs and stream them through the stationary weights."""
     be = sb.plan(cfg, backend=backend).backend
-    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    scale = 1.0 / math.sqrt(dh)
-    B, _, D = x_new.shape
-    Smax = (cache.k if cache.k is not None else
-            (cache.x if cache.x is not None else cache.v)).shape[1]
-    dt = x_new.dtype
+    qpos = pos[:, None]                                   # (B, 1)
 
     if not be.uses_x_cache:
-        q = jnp.einsum("bnd,dhe->bhne", x_new, p["wq"].astype(dt))
-        k_new = jnp.einsum("bnd,dhe->bnhe", x_new, p["wk"].astype(dt))
-        v_new = jnp.einsum("bnd,dhe->bnhe", x_new, p["wv"].astype(dt))
-        if "bq" in p:
-            q = q + p["bq"][:, None, :].astype(dt)
-            k_new = k_new + p["bk"][None, None].astype(dt)
-            v_new = v_new + p["bv"][None, None].astype(dt)
-        if cfg.pos_emb == "rope" and be.needs_rope:
-            q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
-            k_new = layers.apply_rope(
-                k_new.swapaxes(1, 2), pos[:, None], cfg.rope_theta
-            ).swapaxes(1, 2)
+        q, k_new, v_new = _decode_qkv(p, x_new, cfg, be, qpos)
         new_cache = write_kv(cache, k_new, v_new, cfg, pos=pos)
-        k_cache, _ = read_kv(new_cache, dt)
-        qg = q.reshape(B, Hkv, H // Hkv, dh)
-        s = jnp.einsum("bgre,bsge->bgrs", qg.astype(jnp.float32),
-                       k_cache.astype(jnp.float32)).reshape(B, H, 1, Smax) * scale
     else:
+        q = None
         new_cache = write_x(cache, x_new, cfg, pos=pos)
-        x_cache = read_x(new_cache, dt)
-        s = be.scores(x_new, x_cache, score_weights(p), scale=scale)
-        if cache.v is None:
-            v_all = jnp.einsum("bsd,dhe->bshe", x_cache, p["wv"].astype(dt))
-            if "bv" in p:
-                v_all = v_all + p["bv"][None, None].astype(dt)
         if cache.v is not None:
-            v_new = jnp.einsum("bnd,dhe->bnhe", x_new, p["wv"].astype(dt))
-            if "bv" in p:
-                v_new = v_new + p["bv"][None, None].astype(dt)
-            new_cache = write_kv(new_cache, None, v_new, cfg, pos=pos)
-
-    if cfg.logit_softcap:
-        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
-    idx = jnp.arange(Smax)[None, :]
-    ok = idx <= pos[:, None]
-    if window is not None:
-        ok = ok & (idx > pos[:, None] - window)
-    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
-    a = jax.nn.softmax(s, axis=-1).astype(dt)
-
-    if not be.uses_x_cache or cache.v is not None:
-        _, v_src = read_kv(new_cache, dt)
-    else:
-        v_src = v_all
-    ag = a.reshape(B, Hkv, H // Hkv, Smax)
-    o = jnp.einsum("bgrs,bsge->bgre", ag,
-                   v_src.astype(dt)).reshape(B, H, 1, dh)
-    return jnp.einsum("bhne,hed->bnd", o, p["wo"].astype(dt)), new_cache
+            new_cache = write_kv(new_cache, None, _project_v_rows(
+                p, x_new), cfg, pos=pos)
+    out = _decode_attend(p, x_new, q, new_cache, qpos, cfg, be, window)
+    return out, new_cache

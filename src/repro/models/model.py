@@ -286,6 +286,73 @@ class Model:
         head = p["embed"] if cfg.tie_embeddings else p["lm_head"]
         return layers.unembed(h[:, 0], head, cfg.tie_embeddings), cache
 
+    # ----------------------------------------------------- paged serving
+    def supports_paged(self) -> bool:
+        """Paged decode covers the uniform decoder families (dense / moe
+        / vlm). SSM state is O(1)/token (nothing to page), hybrid and
+        enc-dec carry extra non-token-indexed cache tensors — they stay
+        on the dense pool until a later PR."""
+        cfg = self.cfg
+        return bool(cfg.num_heads) and cfg.family not in ("ssm", "hybrid") \
+            and not cfg.enc_dec
+
+    def init_paged_cache(self, num_blocks: int, block_size: int):
+        """Block-pool decode cache: the per-layer KVCache with the batch
+        axis as physical block id and the seq axis as in-block offset —
+        leaves (L, NB, BS, ...). Layout (kv/xv/x, int8) is identical to
+        the dense cache, so paging is layout-agnostic."""
+        if not self.supports_paged():
+            raise ValueError(
+                f"paged cache unsupported for family {self.cfg.family!r}")
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        return {"attn": _stack_pytrees(
+            [attn.init_kv_cache(cfg, num_blocks, block_size, dt)
+             for _ in range(cfg.num_layers)])}
+
+    def decode_paged(self, p, cache, tables, tokens, pos):
+        """n tokens per sequence through the paged cache — the single
+        static-shape graph serving both chunked prefill (n = chunk) and
+        decode ticks (n = 1).
+
+        tokens (B, n) int32; pos (B,) position of the first new token;
+        tables (B, nbk) block tables. Returns (logits (B, n, V), cache);
+        the caller indexes the logits row of the last real token
+        (trailing rows of a padded final chunk are discarded).
+        """
+        cfg = self.cfg
+        x = layers.embed(tokens, p["embed"])
+        if cfg.family == "dense" and cfg.tie_embeddings:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        n = tokens.shape[1]
+        if cfg.pos_emb == "absolute" and "dec_pos" in p:
+            qpos = pos[:, None] + jnp.arange(n)[None, :]
+            x = x + jnp.take(p["dec_pos"], qpos, axis=0)
+
+        window, theta = transformer._layer_windows(cfg, cfg.num_layers)
+
+        def body(h, xs):
+            pl, kv, win, th = xs
+            hn = layers.norm(h, pl["ln1"], cfg.norm)
+            a, kv2 = attn.attention_decode_paged(
+                pl["attn"], hn, kv, tables, pos,
+                transformer._with_theta(cfg, th), window=win)
+            h = h + a
+            hn2 = layers.norm(h, pl["ln2"], cfg.norm)
+            if "moe" in pl:
+                f, _ = moe.moe_ffn(pl["moe"], hn2, cfg.moe, cfg.act)
+            else:
+                f = layers.mlp(hn2, pl["mlp"], cfg.act)
+            return h + f, kv2
+
+        h, new_kv = jax.lax.scan(body, x,
+                                 (p["layers"], cache["attn"], window, theta),
+                                 unroll=util.scan_unroll())
+        cache = dict(cache, attn=new_kv)
+        h = layers.norm(h, p["final_ln"], cfg.norm)
+        head = p["embed"] if cfg.tie_embeddings else p["lm_head"]
+        return layers.unembed(h, head, cfg.tie_embeddings), cache
+
     def _decode_hybrid(self, p, x, cache, pos):
         cfg = self.cfg
         per = cfg.attn_every

@@ -1,15 +1,29 @@
-"""Batched serving engine with continuous batching.
+"""Batched serving engine with continuous batching — dense or paged cache.
 
-A fixed pool of ``max_slots`` decode slots; requests are admitted into
-free slots (their prompts prefilled into the shared cache at the slot's
-batch index), every engine tick runs ONE jitted decode_step for all
-active slots, finished sequences (EOS or max_new_tokens) free their slot
+A fixed set of ``max_slots`` decode slots; requests are admitted into
+free slots, every engine tick runs ONE jitted decode step for all active
+slots, finished sequences (EOS or max_new_tokens) free their slot
 immediately — classic continuous batching (Orca/vLLM style), expressed
-with a single static-shape decode graph so the TPU never recompiles.
+with static-shape graphs so the TPU never recompiles.
 
-Prefill uses a per-request graph over bucketed prompt lengths (powers of
-two) to bound compilation count; the filled rows of the per-request
-cache are copied into the pool at the slot index.
+Two cache regimes:
+
+**Dense** (training-style pool, and the fallback for families the paged
+cache does not cover yet): a ``[max_slots, max_len]`` cache; prefill
+uses a per-request graph over bucketed prompt lengths and copies the
+filled rows into the pool at the slot index.
+
+**Paged** (default where supported): the cache is a pool of fixed-size
+token blocks (``serving/paged.py``) and each sequence holds a block
+table. Admission *asks the allocator* — it reserves
+``ceil((plen + max_new)/block_size)`` blocks (minus any prompt-prefix
+blocks forked copy-on-write from an active sequence with the same
+prompt prefix) and the request stays queued when the pool can't serve
+it. Prompts stream through **chunked prefill**: fixed-size chunks
+through the same ``model.decode_paged`` graph that serves decode ticks,
+so the engine compiles exactly two shapes — ``(1, chunk)`` and
+``(max_slots, 1)`` — instead of one prefill graph per prompt-length
+bucket. Eviction frees blocks back to the allocator.
 
 Greedy or temperature sampling; deterministic given the seed.
 """
@@ -21,6 +35,8 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving import paged as paged_lib
 
 
 @dataclasses.dataclass
@@ -44,7 +60,12 @@ def _bucket(n: int) -> int:
 
 class Engine:
     def __init__(self, model, params, *, max_slots: int = 8,
-                 max_len: int = 512, rng_seed: int = 0):
+                 max_len: int = 512, rng_seed: int = 0,
+                 paged: Optional[bool] = None, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 hbm_bytes: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_sharing: bool = True):
         self.model, self.params = model, params
         self.max_slots, self.max_len = max_slots, max_len
         cfg = model.cfg
@@ -54,14 +75,43 @@ class Engine:
         if getattr(cfg, "num_heads", 0):
             from repro.core import score_backend as sb
             self.plan = sb.plan(cfg, seq_len=max_len)
-        self.cache = model.init_cache(max_slots, max_len)
+        if paged and not model.supports_paged():
+            raise ValueError(
+                f"paged cache unsupported for family {cfg.family!r}")
+        self.paged = model.supports_paged() if paged is None else bool(paged)
+
         self.pos = np.zeros(max_slots, np.int32)          # next position
         self.last_tok = np.zeros(max_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.rng = jax.random.PRNGKey(rng_seed)
-        self._decode = jax.jit(model.decode_step)
-        self._prefills: Dict[int, Callable] = {}
         self.ticks = 0
+        self.peak_active = 0
+
+        if self.paged:
+            self.block_size = block_size
+            self.blocks_per_seq = paged_lib.blocks_for(max_len, block_size)
+            if num_blocks is None:
+                if hbm_bytes is not None:
+                    from repro.serving.kvcache import paged_budget_for
+                    num_blocks = paged_budget_for(
+                        cfg, block_size).max_blocks(hbm_bytes)
+                else:
+                    # default: dense-pool-equivalent capacity (+ null)
+                    num_blocks = max_slots * self.blocks_per_seq + 1
+            self.allocator = paged_lib.BlockAllocator(num_blocks, block_size)
+            self.prefill_chunk = prefill_chunk or 4 * block_size
+            self.prefix_sharing = prefix_sharing
+            self.pool = model.init_paged_cache(num_blocks, block_size)
+            self.tables = np.zeros((max_slots, self.blocks_per_seq),
+                                   np.int32)
+            self._tables_dev = None        # device copy, refreshed lazily
+            self.seq_blocks: List[Optional[paged_lib.SeqBlocks]] = \
+                [None] * max_slots
+            self._decode_paged = jax.jit(model.decode_paged)
+        else:
+            self.cache = model.init_cache(max_slots, max_len)
+            self._decode = jax.jit(model.decode_step)
+            self._prefills: Dict[int, Callable] = {}
 
     # ---------------------------------------------------------- admission
     def _free_slot(self) -> Optional[int]:
@@ -70,17 +120,47 @@ class Engine:
                 return i
         return None
 
+    def _note_active(self):
+        self.peak_active = max(self.peak_active,
+                               sum(r is not None for r in self.slot_req))
+
+    def admit(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot; False if the slot pool (or,
+        paged, the block allocator) cannot serve it right now. A prompt
+        that can never fit (plen >= max_len) raises instead of silently
+        truncating into garbage."""
+        if len(req.tokens) >= self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.tokens)} >= "
+                f"max_len {self.max_len} — can never be served; raise "
+                f"--max-len or truncate the prompt")
+        slot = self._admit_paged(req) if self.paged \
+            else self._admit_dense(req)
+        if slot is None:
+            return False
+        # the admission-sampled token may already complete the request
+        # (max_new_tokens <= 1, or EOS straight out of prefill) — finish
+        # now instead of letting a tick append a second token
+        tok = req.output[-1]
+        if (req.eos_id is not None and tok == req.eos_id) \
+                or len(req.output) >= req.max_new_tokens:
+            req.done = True
+            self._evict(slot)
+        else:
+            self._note_active()
+        return True
+
+    # ---------------------------------------------------- dense admission
     def _prefill_fn(self, plen: int):
         if plen not in self._prefills:
             self._prefills[plen] = jax.jit(
                 lambda p, b: self.model.prefill(p, b, self.max_len))
         return self._prefills[plen]
 
-    def admit(self, req: Request) -> bool:
-        """Prefill ``req`` into a free slot; False if pool is full."""
+    def _admit_dense(self, req: Request) -> Optional[int]:
         slot = self._free_slot()
         if slot is None:
-            return False
+            return None
         plen = len(req.tokens)
         b = _bucket(plen)
         toks = np.zeros((1, b), np.int32)
@@ -99,7 +179,7 @@ class Engine:
         self.slot_req[slot] = req
         self.pos[slot] = plen
         self.last_tok[slot] = int(tok)
-        return True
+        return slot
 
     def _copy_slot(self, cache1, slot: int):
         """Copy batch-row 0 of a single-request cache into pool slot."""
@@ -113,6 +193,89 @@ class Engine:
             return pool.at[slot].set(single[0])
         self.cache = jax.tree_util.tree_map(one, self.cache, cache1)
 
+    # ---------------------------------------------------- paged admission
+    def _find_prefix_donor(self, req: Request):
+        """Longest shareable prompt prefix (whole blocks) among active
+        sequences. Cache rows at position p depend only on tokens 0..p,
+        so equal prompt prefixes mean bit-equal rows — the borrower
+        forks those blocks instead of recomputing them."""
+        best_n, best_slot = 0, None
+        for s, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            n = paged_lib.shared_prefix_blocks(req.tokens, r.tokens,
+                                               self.block_size)
+            n = min(n, len(self.seq_blocks[s].ids))
+            if n > best_n:
+                best_n, best_slot = n, s
+        return best_n, best_slot
+
+    def _admit_paged(self, req: Request) -> Optional[int]:
+        slot = self._free_slot()
+        if slot is None:
+            return None
+        plen = len(req.tokens)
+        BS = self.block_size
+        need_tokens = min(plen + req.max_new_tokens, self.max_len)
+        n_res = min(paged_lib.blocks_for(need_tokens, BS),
+                    self.blocks_per_seq)
+
+        n_shared, donor = 0, None
+        if self.prefix_sharing:
+            n_shared, donor = self._find_prefix_donor(req)
+            n_shared = min(n_shared, n_res)
+        n_fresh = n_res - n_shared
+        if n_fresh > self.allocator.num_usable:
+            raise ValueError(
+                f"request {req.rid}: needs {n_fresh} blocks, pool has "
+                f"{self.allocator.num_usable} — raise --hbm-budget or "
+                f"lower max_len/max_new_tokens")
+        if n_fresh > self.allocator.num_free:
+            return None                        # exhausted: stay queued
+        fresh = self.allocator.alloc(n_fresh)
+        ids = []
+        if n_shared:
+            ids = self.allocator.fork(self.seq_blocks[donor].ids[:n_shared])
+        ids += fresh
+        self.seq_blocks[slot] = paged_lib.SeqBlocks(ids, n_shared)
+        self.tables[slot, :] = 0
+        self.tables[slot, :len(ids)] = ids
+        self._tables_dev = None
+
+        # chunked prefill: stream the (unshared part of the) prompt in
+        # fixed-size chunks through the shared decode graph. Writes at
+        # block-aligned ``start`` onward touch only exclusively-owned
+        # blocks; padding past the table lands in the null block.
+        C = self.prefill_chunk
+        trow = jnp.asarray(self.tables[slot:slot + 1])
+        start = n_shared * BS
+        logits = None
+        for c0 in range(start, plen, C):
+            chunk = req.tokens[c0:c0 + C]
+            buf = np.zeros((1, C), np.int32)
+            buf[0, :len(chunk)] = chunk
+            logits, self.pool = self._decode_paged(
+                self.params, self.pool, trow, jnp.asarray(buf),
+                jnp.asarray([c0], np.int32))
+            last_c0 = c0
+        tok = self._sample(logits[:, plen - 1 - last_c0])[0]
+        req.output.append(int(tok))
+        self.slot_req[slot] = req
+        self.pos[slot] = plen
+        self.last_tok[slot] = int(tok)
+        return slot
+
+    def _evict(self, slot: int):
+        """Free the slot (paged: return blocks to the allocator)."""
+        self.slot_req[slot] = None
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+        if self.paged and self.seq_blocks[slot] is not None:
+            self.allocator.free(self.seq_blocks[slot].ids)
+            self.seq_blocks[slot] = None
+            self.tables[slot, :] = 0
+            self._tables_dev = None
+
     # -------------------------------------------------------------- tick
     def _sample(self, logits) -> np.ndarray:
         self.rng, k = jax.random.split(self.rng)
@@ -121,12 +284,23 @@ class Engine:
 
     def tick(self):
         """One decode step for all slots (inactive slots decode garbage
-        into their own row; masked on readout)."""
+        into their own row / the null block; masked on readout)."""
         if all(r is None for r in self.slot_req):
             return
         toks = jnp.asarray(self.last_tok)
         pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        if self.paged:
+            # tables only change at admit/evict — reuse the device copy
+            # across decode ticks instead of re-uploading every step
+            if self._tables_dev is None:
+                self._tables_dev = jnp.asarray(self.tables)
+            logits, self.pool = self._decode_paged(
+                self.params, self.pool, self._tables_dev,
+                toks[:, None], pos)
+            logits = logits[:, 0]
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              toks, pos)
         nxt = self._sample(logits)
         self.ticks += 1
         for s, req in enumerate(self.slot_req):
@@ -140,7 +314,7 @@ class Engine:
             if hit_eos or len(req.output) >= req.max_new_tokens \
                     or self.pos[s] >= self.max_len - 1:
                 req.done = True
-                self.slot_req[s] = None
+                self._evict(s)
 
     # --------------------------------------------------------------- run
     def run(self, requests: List[Request], max_ticks: int = 10_000

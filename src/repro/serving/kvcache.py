@@ -39,6 +39,42 @@ class CacheBudget:
         return hbm_bytes // max(self.bytes_per_token, 1)
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedCacheBudget(CacheBudget):
+    """Block-granular accounting for the paged engine (serving/paged.py).
+
+    The dense pool reserves ``max_slots * max_len`` tokens up front; the
+    paged pool reserves ``num_blocks * block_size`` tokens and hands
+    blocks to sequences on demand, so the same HBM admits every request
+    whose *actual* length fits — the allocator realizes the
+    bytes-per-token argument this module has always modelled. X-cache
+    layouts shrink ``bytes_per_block`` by the same 2·Hkv·dh/D factor as
+    the dense rows (DESIGN.md §7)."""
+    block_size: int = 16
+
+    @property
+    def bytes_per_block(self) -> int:
+        return self.bytes_per_token * self.block_size
+
+    def max_blocks(self, hbm_bytes: int) -> int:
+        """Physical blocks an HBM budget buys (the paged pool's NB;
+        one of them is the engine's reserved null block)."""
+        return hbm_bytes // max(self.bytes_per_block, 1)
+
+    def max_tokens(self, hbm_bytes: int) -> int:
+        """Usable cached tokens: whole blocks only."""
+        return self.max_blocks(hbm_bytes) * self.block_size
+
+
+def paged_budget_for(cfg, block_size: int = 16,
+                     dtype_bytes: int = 2) -> PagedCacheBudget:
+    """Block-table sizing for cfg — same planned backend/layout as
+    ``budget_for``, quantized to ``block_size``-token blocks."""
+    b = budget_for(cfg, dtype_bytes)
+    return PagedCacheBudget(block_size=block_size,
+                            **dataclasses.asdict(b))
+
+
 def budget_for(cfg, dtype_bytes: int = 2) -> CacheBudget:
     """Per-token cache bytes for cfg — the layout comes from the planned
     score backend's capability flags (``uses_x_cache``), the sizing from

@@ -1,0 +1,147 @@
+"""Paged decode-cache allocator: vLLM-style block tables over the
+KV/XV/X cache pool.
+
+The dense engine reserves a worst-case ``max_len`` row per slot; at
+serving scale that wastes most of HBM on unwritten cache (short prompts,
+early EOS). This module manages the cache as fixed-size **token blocks**
+instead:
+
+  * the pool is an ordinary stacked cache pytree built by
+    ``model.init_paged_cache(num_blocks, block_size)`` — leaves
+    ``(L, NB, BS, ...)``, i.e. the dense cache with the batch axis
+    reinterpreted as *physical block id* and the sequence axis as
+    *offset within block*. Every cache layout (kv / xv / x, float or
+    int8-quantized) pages identically because paging happens on the
+    pytree, not on the fields.
+  * each sequence owns a **block table**: logical block ``i`` of the
+    sequence (positions ``[i·BS, (i+1)·BS)``) maps to a physical block
+    id. Tables are host-side numpy; the decode graph receives them as a
+    dense ``(B, nbk)`` int32 operand and gathers/scatters through them
+    (``models.attention.attention_decode_paged``).
+  * blocks are **refcounted** so sequences with a common prompt prefix
+    share the prefix's full blocks (cache rows at position p depend only
+    on tokens ``0..p``, so equal prefixes mean equal rows). Writes only
+    ever target exclusively-owned blocks: the engine shares whole blocks
+    strictly below the forked prefix and starts its own writes at the
+    following block boundary, and ``ensure_exclusive`` provides the
+    copy-on-write escape hatch for any other write pattern.
+
+Physical block 0 is reserved as the **null/trash block**: unassigned
+block-table entries point at it, so out-of-range writes (chunk padding)
+land there and out-of-range reads are mask-discarded. The allocator
+never hands it out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+NULL_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` positions."""
+    return -(-max(n_tokens, 0) // block_size)
+
+
+def shared_prefix_blocks(a: Sequence[int], b: Sequence[int],
+                         block_size: int) -> int:
+    """Whole blocks coverable by the longest common prefix of two token
+    sequences. Capped at ``(len(a)-1)//block_size`` so the borrower
+    always prefills at least its final prompt token itself (the
+    admission logits must come from *its* forward pass)."""
+    lcp = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        lcp += 1
+    return min(lcp // block_size, max(len(a) - 1, 0) // block_size)
+
+
+class BlockAllocator:
+    """Refcounted free-list allocator over ``num_blocks`` physical blocks.
+
+    Block 0 (``NULL_BLOCK``) is reserved and never allocated. All-or-
+    nothing ``alloc``: a request that cannot be fully served leaves the
+    allocator untouched (the engine queues the request instead).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._ref = [0] * num_blocks
+
+    # ------------------------------------------------------------ queries
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_usable(self) -> int:
+        """Allocatable blocks (pool minus the null block)."""
+        return self.num_blocks - 1
+
+    def refcount(self, bid: int) -> int:
+        return self._ref[bid]
+
+    # ------------------------------------------------------------- verbs
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` blocks (refcount 1 each) or None if short."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        for b in ids:
+            self._ref[b] = 1
+        return ids
+
+    def fork(self, ids: Sequence[int]) -> List[int]:
+        """Share ``ids`` with a new owner (copy-on-write semantics:
+        refcount goes up; the blocks themselves are not copied)."""
+        for b in ids:
+            if self._ref[b] <= 0:
+                raise ValueError(f"fork of unallocated block {b}")
+            self._ref[b] += 1
+        return list(ids)
+
+    def free(self, ids: Sequence[int]) -> None:
+        """Drop one reference per block; fully-released blocks return to
+        the free list (the engine calls this on eviction/finish)."""
+        for b in ids:
+            if self._ref[b] <= 0:
+                raise ValueError(f"double free of block {b}")
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                self._free.append(b)
+
+    def ensure_exclusive(self, bid: int,
+                         copy_block: Callable[[int, int], None]
+                         ) -> Optional[int]:
+        """Copy-on-write: return a block id safe to write through.
+
+        If ``bid`` is exclusively owned it is returned as-is; if shared,
+        a fresh block is allocated, ``copy_block(src, dst)`` duplicates
+        the cache rows, and the caller's reference to ``bid`` is
+        dropped. None if the pool is exhausted (caller queues/preempts).
+        """
+        if self._ref[bid] <= 1:
+            return bid
+        fresh = self.alloc(1)
+        if fresh is None:
+            return None
+        copy_block(bid, fresh[0])
+        self.free([bid])
+        return fresh[0]
+
+
+@dataclasses.dataclass
+class SeqBlocks:
+    """One sequence's block-table row: logical order, index i covers
+    positions [i*block_size, (i+1)*block_size)."""
+    ids: List[int]
+    num_shared: int = 0      # leading ids forked from a prefix donor
+
+    def __len__(self):
+        return len(self.ids)

@@ -1,0 +1,294 @@
+"""Paged decode cache: allocator semantics, paged/dense parity, and
+engine lifecycle edge cases (chunk-boundary EOS, block reuse after
+eviction, allocator exhaustion, copy-on-write prefix sharing)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, reduced
+from repro.models.model import build_model
+from repro.serving import kvcache
+from repro.serving.engine import Engine, Request
+from repro.serving.paged import (BlockAllocator, NULL_BLOCK, blocks_for,
+                                 shared_prefix_blocks)
+
+
+# ---------------------------------------------------------------- allocator
+
+def test_allocator_alloc_free_roundtrip():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    assert a.num_usable == 7 and a.num_free == 7
+    ids = a.alloc(3)
+    assert len(ids) == 3 and NULL_BLOCK not in ids
+    assert a.num_free == 4
+    assert a.alloc(5) is None            # all-or-nothing: 4 < 5
+    assert a.num_free == 4               # failed alloc left state intact
+    a.free(ids)
+    assert a.num_free == 7
+    with pytest.raises(ValueError):
+        a.free(ids[:1])                  # double free
+
+
+def test_allocator_fork_refcounts():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    ids = a.alloc(2)
+    shared = a.fork(ids)
+    assert shared == ids
+    assert all(a.refcount(b) == 2 for b in ids)
+    a.free(ids)                          # donor finishes first...
+    assert a.num_free == 5               # ...blocks survive for borrower
+    a.free(shared)
+    assert a.num_free == 7
+
+
+def test_allocator_copy_on_write():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    copies = []
+    (bid,) = a.alloc(1)
+    assert a.ensure_exclusive(bid, lambda s, d: copies.append((s, d))) == bid
+    assert copies == []                  # exclusive: no copy
+    a.fork([bid])
+    fresh = a.ensure_exclusive(bid, lambda s, d: copies.append((s, d)))
+    assert fresh != bid and copies == [(bid, fresh)]
+    assert a.refcount(bid) == 1          # our ref moved to the copy
+    assert a.refcount(fresh) == 1
+
+
+def test_shared_prefix_blocks_math():
+    BS = 4
+    assert shared_prefix_blocks([1, 2, 3, 4, 5], [1, 2, 3, 4, 9], BS) == 1
+    assert shared_prefix_blocks([1, 2, 3, 9], [1, 2, 3, 4], BS) == 0
+    # full-prompt match is capped so the borrower still prefills its
+    # last token itself (admission logits must be its own)
+    assert shared_prefix_blocks([1, 2, 3, 4], [1, 2, 3, 4], BS) == 0
+    assert shared_prefix_blocks([1, 2, 3, 4] * 3, [1, 2, 3, 4] * 3, BS) == 2
+    assert blocks_for(0, BS) == 0 and blocks_for(1, BS) == 1
+    assert blocks_for(4, BS) == 1 and blocks_for(5, BS) == 2
+
+
+def test_paged_budget_block_math():
+    """DESIGN.md §7: blocks/byte follow the same X-cache crossover as
+    dense rows — whisper's x layout shrinks the block by 2·Hkv·dh/D."""
+    wh = dataclasses.replace(get_arch("whisper-tiny"), cache_mode=None)
+    qw = get_arch("qwen2.5-14b")
+    pb_wh = kvcache.paged_budget_for(wh, block_size=16)
+    pb_qw = kvcache.paged_budget_for(qw, block_size=16)
+    assert pb_wh.mode == "x" and pb_qw.mode == "kv"
+    assert pb_wh.bytes_per_block == pb_wh.bytes_per_token * 16
+    # same budget buys more x-layout blocks than kv would on whisper geom
+    kv_row = 2 * wh.num_kv_heads * wh.head_dim
+    assert wh.d_model < kv_row
+    assert pb_wh.max_blocks(1 << 20) > (1 << 20) // (
+        kv_row * 2 * pb_wh.layers * 16)
+    # usable tokens quantize to whole blocks
+    assert pb_qw.max_tokens(1 << 20) == pb_qw.max_blocks(1 << 20) * 16
+
+
+# ----------------------------------------------------------------- fixtures
+
+def _mk_model(**over):
+    cfg = reduced(get_arch("qwen2.5-14b"), num_layers=2, **over)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _mk_model()
+
+
+def _reqs(n, seed=0, max_new=6, plens=(3, 9, 17, 33), eos=None):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        toks = [1] + rng.integers(3, 500, plens[i % len(plens)] - 1).tolist()
+        out.append(Request(rid=i, tokens=toks, max_new_tokens=max_new,
+                           eos_id=eos))
+    return out
+
+
+# ------------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("score_mode", ["standard", "wqk"])
+def test_paged_engine_matches_dense(score_mode):
+    """Same requests through the paged and dense engines produce
+    identical greedy outputs across kv and x cache layouts."""
+    model, params = _mk_model(score_mode=score_mode)
+    dense = Engine(model, params, max_slots=2, max_len=64, paged=False)
+    pagede = Engine(model, params, max_slots=2, max_len=64, paged=True,
+                    block_size=8, prefill_chunk=16)
+    ra, rb = _reqs(5), _reqs(5)
+    dense.run(ra)
+    pagede.run(rb)
+    for x, y in zip(ra, rb):
+        assert x.output == y.output, (x.rid, x.output, y.output)
+
+
+def test_paged_logits_match_dense(setup):
+    """Per-token logits through the paged graph match the dense
+    prefill+decode path to fp tolerance (incl. a chunk-crossing
+    prompt). Runs the same harness as the CI serving acceptance check
+    (benchmarks.serving_load) so the two cannot drift apart."""
+    from benchmarks.serving_load import paged_vs_dense_logits
+    model, params = setup
+    prompt = [1] + list(range(5, 22))            # 18 tokens, chunks of 8
+    ref, got = paged_vs_dense_logits(model, params, prompt, max_len=48,
+                                     block_size=4, chunk=8, steps=4)
+    assert len(ref) == len(got) == 5
+    for r, g in zip(ref, got):
+        np.testing.assert_allclose(r, g, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- lifecycle
+
+def test_eos_at_chunk_and_block_boundary(setup):
+    """EOS landing exactly on a block/chunk boundary frees the slot and
+    every block. Prompt length == prefill chunk exercises the full-final-
+    chunk path; the EOS position is arranged to sit at pos % BS == 0."""
+    model, params = setup
+    BS, C = 4, 8
+    prompt = [1] + list(range(7, 14))            # plen=8: exactly one chunk
+    eng = Engine(model, params, max_slots=2, max_len=32, paged=True,
+                 block_size=BS, prefill_chunk=C)
+    probe = Request(rid=0, tokens=list(prompt), max_new_tokens=6,
+                    eos_id=None)
+    eng.run([probe])
+    assert probe.done and len(probe.output) == 6
+    assert eng.allocator.num_free == eng.allocator.num_usable
+
+    # deterministic greedy: re-running with eos_id set to the token that
+    # lands exactly on the boundary terminates right there.
+    # output[i] sits at position plen + i; choose i with (plen+i) % BS == 0
+    # (i >= 1: only tick-sampled tokens are EOS-checked)
+    i_boundary = (BS - len(prompt) % BS) % BS or BS
+    eos_tok = probe.output[i_boundary]
+    assert eos_tok not in probe.output[1:i_boundary]  # no earlier EOS hit
+    eng2 = Engine(model, params, max_slots=2, max_len=32, paged=True,
+                  block_size=BS, prefill_chunk=C)
+    req = Request(rid=1, tokens=list(prompt), max_new_tokens=6,
+                  eos_id=eos_tok)
+    eng2.run([req])
+    assert req.done
+    assert req.output == probe.output[:i_boundary + 1]
+    assert (len(prompt) + i_boundary) % BS == 0
+    assert eng2.allocator.num_free == eng2.allocator.num_usable
+    assert eng2.slot_req == [None, None]
+
+
+def test_block_reuse_after_eviction(setup):
+    """More requests than slots: evicted sequences' blocks are recycled
+    and a second wave on the same engine matches a fresh engine."""
+    model, params = setup
+    eng = Engine(model, params, max_slots=2, max_len=64, paged=True,
+                 block_size=8, prefill_chunk=16)
+    wave1 = _reqs(4, seed=1)
+    eng.run(wave1)
+    assert all(r.done for r in wave1)
+    assert eng.allocator.num_free == eng.allocator.num_usable
+
+    wave2 = _reqs(3, seed=2)
+    fresh = _reqs(3, seed=2)
+    eng.run(wave2)
+    eng_fresh = Engine(model, params, max_slots=2, max_len=64, paged=True,
+                       block_size=8, prefill_chunk=16)
+    eng_fresh.run(fresh)
+    for a, b in zip(wave2, fresh):
+        assert a.output == b.output       # recycled blocks are clean
+
+
+def test_allocator_exhaustion_queues_requests(setup):
+    """A pool too small for all requests at once serves them anyway —
+    admission fails over to the queue, never crashes."""
+    model, params = setup
+    # each request: plen 17 + 6 new -> 3 blocks of 8; pool holds 7 usable
+    eng = Engine(model, params, max_slots=4, max_len=64, paged=True,
+                 block_size=8, num_blocks=8, prefill_chunk=16)
+    rr = _reqs(4, plens=(17,), max_new=6)
+    eng.run(rr)
+    assert all(r.done for r in rr)
+    assert eng.peak_active <= 2           # pool capped concurrency at 2
+    assert eng.allocator.num_free == eng.allocator.num_usable
+
+    # a request that can NEVER fit raises instead of spinning forever
+    big = Request(rid=99, tokens=list(range(1, 60)), max_new_tokens=6,
+                  eos_id=None)
+    with pytest.raises(ValueError):
+        eng.admit(big)
+
+
+def test_admission_token_completes_request(setup):
+    """max_new_tokens=1 yields exactly ONE token (the admission sample),
+    and an EOS sampled straight out of prefill terminates immediately —
+    in both cache regimes (a tick must never append a second token)."""
+    model, params = setup
+    for paged in (True, False):
+        eng = Engine(model, params, max_slots=2, max_len=32, paged=paged,
+                     block_size=8, prefill_chunk=16)
+        r = Request(rid=0, tokens=[1, 5, 9], max_new_tokens=1,
+                    eos_id=None)
+        eng.run([r])
+        assert r.done and len(r.output) == 1
+        if paged:
+            assert eng.allocator.num_free == eng.allocator.num_usable
+        eng2 = Engine(model, params, max_slots=2, max_len=32, paged=paged,
+                      block_size=8, prefill_chunk=16)
+        r2 = Request(rid=1, tokens=[1, 5, 9], max_new_tokens=4,
+                     eos_id=r.output[0])
+        eng2.run([r2])
+        assert r2.done and r2.output == r.output[:1]
+
+
+def test_oversized_prompt_rejected(setup):
+    """plen >= max_len is rejected up front in BOTH regimes — it would
+    otherwise truncate the prompt into garbage output (paged: tail
+    tokens routed to the null block)."""
+    model, params = setup
+    for paged in (True, False):
+        eng = Engine(model, params, max_slots=2, max_len=32, paged=paged,
+                     block_size=8, prefill_chunk=16)
+        with pytest.raises(ValueError, match="prompt length"):
+            eng.admit(Request(rid=0, tokens=list(range(1, 40)),
+                              max_new_tokens=4, eos_id=None))
+
+
+def test_prefix_sharing_correctness_and_reuse(setup):
+    """Requests sharing a 24-token prompt prefix fork its full blocks:
+    outputs are identical to unshared execution and the allocator hands
+    out fewer fresh blocks."""
+    model, params = setup
+    rng = np.random.default_rng(7)
+    prefix = [1] + rng.integers(3, 500, 23).tolist()
+
+    def mk_reqs():
+        return [Request(rid=i, tokens=prefix + [10 + i], max_new_tokens=5,
+                        eos_id=None) for i in range(3)]
+
+    shared = Engine(model, params, max_slots=3, max_len=64, paged=True,
+                    block_size=8, prefill_chunk=16, prefix_sharing=True)
+    plain = Engine(model, params, max_slots=3, max_len=64, paged=True,
+                   block_size=8, prefill_chunk=16, prefix_sharing=False)
+
+    # admit manually to observe the allocator mid-flight
+    rs, rp = mk_reqs(), mk_reqs()
+    for r in rs:
+        assert shared.admit(r)
+    for r in rp:
+        assert plain.admit(r)
+    # 25-token prompt + 5 new = 30 tokens -> 4 blocks each; sharing forks
+    # the 3 full prefix blocks, so only the tail block is fresh
+    assert shared.seq_blocks[1].num_shared == 3
+    assert shared.seq_blocks[2].num_shared == 3
+    used_shared = shared.allocator.num_usable - shared.allocator.num_free
+    used_plain = plain.allocator.num_usable - plain.allocator.num_free
+    assert used_shared == used_plain - 2 * 3
+    for b in shared.seq_blocks[0].ids[:3]:
+        assert shared.allocator.refcount(b) == 3
+
+    shared.run(rs)
+    plain.run(rp)
+    for a, b in zip(rs, rp):
+        assert a.done and a.output == b.output
+    assert shared.allocator.num_free == shared.allocator.num_usable

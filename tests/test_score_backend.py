@@ -199,12 +199,13 @@ def test_memory_bytes_per_token_matches_budget():
             pl.backend.memory_bytes_per_token(cfg, 2, cache_mode=pl.cache_mode)
 
 
-def test_deprecated_shim_warns():
-    rng = np.random.default_rng(0)
-    from repro.core.attention_scores import compute_scores
-    sw = _mk(rng)
-    x = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
-    with pytest.warns(DeprecationWarning):
-        s = compute_scores("wqk", x, x, sw, 1.0)
-    ref = sb.get_backend("wqk").scores(x, x, sw, scale=1.0)
-    np.testing.assert_allclose(np.asarray(s), np.asarray(ref))
+def test_deprecated_shim_removed():
+    """The stringly-typed compute_scores shim and the SCORE_MODES static
+    snapshot were removed this release; the registry is canonical."""
+    import importlib
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.core.attention_scores")
+    from repro.configs import base
+    assert not hasattr(base, "SCORE_MODES")
+    assert set(sb.list_backends()) >= {"standard", "wqk", "wqk_int8",
+                                       "wqk_int8_pallas", "factored"}

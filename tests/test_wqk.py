@@ -14,7 +14,13 @@ except ImportError:                       # CI container has no hypothesis
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import wqk
-from repro.core.attention_scores import ScoreWeights, compute_scores, fold
+from repro.core import score_backend as sb
+from repro.core.score_backend import ScoreWeights
+
+
+def _scores(mode, x_q, x_kv, sw, scale, rope_fn=None):
+    return sb.get_backend(mode).scores(x_q, x_kv, sw, scale=scale,
+                                       rope_fn=rope_fn)
 
 
 def _mk(rng, D=32, H=4, Hkv=2, dh=16, bias=False):
@@ -32,19 +38,19 @@ def test_wqk_equals_standard(rng, bias, gqa):
     sw = _mk(rng, H=H, Hkv=Hkv, bias=bias)
     x = jnp.asarray(rng.standard_normal((2, 10, 32)), jnp.float32)
     y = jnp.asarray(rng.standard_normal((2, 7, 32)), jnp.float32)
-    s_std = compute_scores("standard", x, y, sw, scale=0.25)
-    s_wqk = compute_scores("wqk", x, y, sw, scale=0.25)
+    s_std = _scores("standard", x, y, sw, scale=0.25)
+    s_wqk = _scores("wqk", x, y, sw, scale=0.25)
     np.testing.assert_allclose(np.asarray(s_std), np.asarray(s_wqk),
                                rtol=2e-4, atol=2e-4)
 
 
 def test_fold_precompute_matches_lazy(rng):
     sw = _mk(rng, bias=True)
-    folded = fold(sw)
+    folded = sb.get_backend("wqk").fold(sw)
     assert folded.wqk.shape == (4, 33, 33)           # D+1 augmented
     x = jnp.asarray(rng.standard_normal((3, 8, 32)), jnp.float32)
-    a = compute_scores("wqk", x, x, sw, 1.0)
-    b = compute_scores("wqk", x, x, folded, 1.0)
+    a = _scores("wqk", x, x, sw, 1.0)
+    b = _scores("wqk", x, x, folded, 1.0)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
 
 
@@ -61,8 +67,8 @@ def test_factored_equals_explicit(rng):
 def test_wqk_int8_close_to_float(rng):
     sw = _mk(rng)
     x = jnp.asarray(rng.standard_normal((2, 16, 32)), jnp.float32)
-    s_f = compute_scores("wqk", x, x, sw, 1.0)
-    s_q = compute_scores("wqk_int8", x, x, sw, 1.0)
+    s_f = _scores("wqk", x, x, sw, 1.0)
+    s_q = _scores("wqk_int8", x, x, sw, 1.0)
     # W8A8 quantization noise: relative error of the score matrix
     denom = float(jnp.max(jnp.abs(s_f))) + 1e-9
     rel = float(jnp.max(jnp.abs(s_f - s_q))) / denom
@@ -78,8 +84,8 @@ def test_wqk_property_random_shapes(n, d, h):
         wq=jnp.asarray(r.standard_normal((d, h, 8)), jnp.float32),
         wk=jnp.asarray(r.standard_normal((d, h, 8)), jnp.float32))
     x = jnp.asarray(r.standard_normal((n, d)), jnp.float32)
-    s1 = compute_scores("standard", x, x, sw, 1.0)
-    s2 = compute_scores("wqk", x, x, sw, 1.0)
+    s1 = _scores("standard", x, x, sw, 1.0)
+    s2 = _scores("wqk", x, x, sw, 1.0)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
                                rtol=5e-3, atol=5e-3)
 
@@ -92,6 +98,6 @@ def test_rope_breaks_plain_fold_documented(rng):
     x = jnp.asarray(rng.standard_normal((1, 6, 32)), jnp.float32)
     pos = jnp.arange(6)
     rope = lambda t, which: layers.apply_rope(t, pos, 10_000.0)
-    s_rope = compute_scores("standard", x, x, sw, 1.0, rope_fn=rope)
-    s_wqk = compute_scores("wqk", x, x, sw, 1.0)
+    s_rope = _scores("standard", x, x, sw, 1.0, rope_fn=rope)
+    s_wqk = _scores("wqk", x, x, sw, 1.0)
     assert float(jnp.max(jnp.abs(s_rope - s_wqk))) > 1e-3
