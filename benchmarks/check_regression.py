@@ -1,25 +1,38 @@
-"""Bench-regression gate: fail CI when a score-backend sweep latency
-regresses vs the committed baseline.
+"""Bench-regression gate: fail CI when a benchmarked latency regresses
+vs the committed baseline.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline BENCH_baseline.json --current BENCH_scores.json
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline BENCH_baseline.json --current BENCH_serving.json
+
+Two gated sections, auto-detected from whatever the --current file
+carries (the baseline holds both):
+
+  * ``backends``    — the score-backend sweep (BENCH_scores.json),
+    rows keyed by backend name, metric ``seconds_per_call``,
+    normalized to the ``standard`` backend.
+  * ``decode_tick`` — the serving decode-tick rows (BENCH_serving.json),
+    metric ``seconds_per_tick``, normalized to the ``gather`` schedule
+    row — this is what keeps the block-streamed schedule's
+    length-proportional win from silently eroding.
 
 CI runners and dev machines differ wildly in absolute speed, so the
-default comparison is **machine-normalized**: each backend's
-``seconds_per_call`` is divided by the same run's ``standard`` backend
-latency, and the *ratio* is compared across runs. A backend whose
-normalized latency exceeds baseline by more than ``--threshold``
-(default 25%) fails the gate — that catches "someone made wqk_int8 2x
-slower relative to everything else" without flaking on slow runners.
+default comparison is **machine-normalized**: each row's metric is
+divided by the same run's reference row, and the *ratio* is compared
+across runs. A row whose normalized latency exceeds baseline by more
+than ``--threshold`` (default 25%) fails the gate — that catches
+"someone made wqk_int8 2x slower relative to everything else" (or "the
+streamed tick lost its early exit") without flaking on slow runners.
 
 Normalization is blind to regressions in the reference itself (and to
-uniform across-the-board slowdowns): ``standard``/``standard`` is 1.0
-in every run. As a backstop, the reference's *raw* latency is also
+uniform across-the-board slowdowns): reference/reference is 1.0 in
+every run. As a backstop, the reference's *raw* latency is also
 compared, with a deliberately loose ``--ref-threshold`` (default 10x —
 cross-machine absolute speeds legitimately differ severalfold, so only
 order-of-magnitude reference regressions are actionable from CI).
-``--absolute`` compares raw seconds for every backend instead
-(same-machine trend runs, where tight absolute checks are meaningful).
+``--absolute`` compares raw seconds for every row instead (same-machine
+trend runs, where tight absolute checks are meaningful).
 """
 from __future__ import annotations
 
@@ -27,48 +40,61 @@ import argparse
 import json
 import sys
 
-REFERENCE = "standard"        # normalization denominator
+# section name -> (reference row for normalization, metric key)
+SECTIONS = {
+    "backends": ("standard", "seconds_per_call"),
+    "decode_tick": ("gather", "seconds_per_tick"),
+}
 
 
 def _load(path: str) -> dict:
     with open(path) as f:
-        return json.load(f)["backends"]
+        return json.load(f)
 
 
-def _normalized(rows: dict, absolute: bool) -> dict:
+def _rows(section: dict, metric: str) -> dict:
+    """Gate-able rows: sub-dicts carrying the metric (sections may hold
+    scalars/workload metadata alongside, e.g. decode_tick.speedup)."""
+    return {k: v for k, v in section.items()
+            if isinstance(v, dict) and metric in v}
+
+
+def _normalized(rows: dict, absolute: bool, reference: str,
+                metric: str) -> dict:
     if absolute:
-        return {k: r["seconds_per_call"] for k, r in rows.items()}
-    ref = rows[REFERENCE]["seconds_per_call"] or 1e-12
-    return {k: r["seconds_per_call"] / ref for k, r in rows.items()}
+        return {k: r[metric] for k, r in rows.items()}
+    ref = rows[reference][metric] or 1e-12
+    return {k: r[metric] / ref for k, r in rows.items()}
 
 
 def check(baseline: dict, current: dict, threshold: float,
-          absolute: bool, ref_threshold: float = 10.0) -> list:
+          absolute: bool, ref_threshold: float = 10.0, *,
+          reference: str, metric: str) -> list:
     failures = []
     if not absolute:
         # the unit decision must be made once for BOTH files — a missing
         # reference in one would silently compare seconds against ratios
         missing = [lbl for lbl, rows in (("baseline", baseline),
                                          ("current", current))
-                   if REFERENCE not in rows]
+                   if reference not in rows]
         if missing:
-            return [f"reference backend {REFERENCE!r} missing from "
+            return [f"reference row {reference!r} missing from "
                     f"{' and '.join(missing)} — cannot normalize; re-run "
                     f"the sweep or pass --absolute"]
-        b_ref = baseline[REFERENCE]["seconds_per_call"]
-        c_ref = current[REFERENCE]["seconds_per_call"]
+        b_ref = baseline[reference][metric]
+        c_ref = current[reference][metric]
         rr = c_ref / b_ref if b_ref > 0 else float("inf")
-        print(f"  reference {REFERENCE!r} raw: {b_ref:.4g}s -> "
+        print(f"  reference {reference!r} raw: {b_ref:.4g}s -> "
               f"{c_ref:.4g}s ({rr:.2f}x; backstop limit "
               f"{ref_threshold:.0f}x)")
         if rr > ref_threshold:
             failures.append(
-                f"{REFERENCE} (reference, raw seconds): {c_ref:.4g}s vs "
+                f"{reference} (reference, raw seconds): {c_ref:.4g}s vs "
                 f"baseline {b_ref:.4g}s ({rr:.2f}x > {ref_threshold:.0f}x "
                 f"backstop — normalization cannot see this)")
-    base = _normalized(baseline, absolute)
-    cur = _normalized(current, absolute)
-    unit = "s" if absolute else "x standard"
+    base = _normalized(baseline, absolute, reference, metric)
+    cur = _normalized(current, absolute, reference, metric)
+    unit = "s" if absolute else f"x {reference}"
     for name in sorted(base):
         if name not in cur:
             failures.append(f"{name}: present in baseline, missing from "
@@ -97,21 +123,35 @@ def main(argv=None) -> int:
                          "25%%)")
     ap.add_argument("--absolute", action="store_true",
                     help="compare raw seconds instead of "
-                         "standard-normalized ratios")
+                         "reference-normalized ratios")
     ap.add_argument("--ref-threshold", type=float, default=10.0,
                     help="allowed raw-latency factor for the reference "
-                         "backend (backstop for the normalization blind "
+                         "row (backstop for the normalization blind "
                          "spot; loose because machines differ)")
     args = ap.parse_args(argv)
 
-    mode = "absolute" if args.absolute else f"normalized to {REFERENCE!r}"
-    print(f"bench-regression gate ({mode}, threshold "
-          f"{args.threshold:.0%}):")
-    failures = check(_load(args.baseline), _load(args.current),
-                     args.threshold, args.absolute,
-                     ref_threshold=args.ref_threshold)
+    baseline, current = _load(args.baseline), _load(args.current)
+    sections = [s for s in SECTIONS if s in current]
+    if not sections:
+        print(f"no gate-able sections in {args.current} "
+              f"(known: {sorted(SECTIONS)})")
+        return 1
+    failures = []
+    for sec in sections:
+        reference, metric = SECTIONS[sec]
+        mode = "absolute" if args.absolute else f"normalized to {reference!r}"
+        print(f"bench-regression gate [{sec}] ({mode}, threshold "
+              f"{args.threshold:.0%}):")
+        if sec not in baseline:
+            print(f"  [new ] section {sec!r} has no baseline — skipped")
+            continue
+        failures += check(_rows(baseline[sec], metric),
+                          _rows(current[sec], metric),
+                          args.threshold, args.absolute,
+                          ref_threshold=args.ref_threshold,
+                          reference=reference, metric=metric)
     if failures:
-        print(f"\nREGRESSION: {len(failures)} backend(s) over threshold")
+        print(f"\nREGRESSION: {len(failures)} row(s) over threshold")
         for f in failures:
             print(f"  - {f}")
         return 1

@@ -93,6 +93,11 @@ class ModelConfig:
     # quantization is the SAME one the score path applies, so accuracy
     # cost is ~zero. Applies to wqk*/x-carrying cache modes only.
     cache_quant: Optional[str] = None  # None | int8
+    # paged-decode schedule override: None = auto (block-streamed online
+    # softmax with used-length early exit when the planned backend
+    # supports it; see kernels/paged_attention). 'gather' forces the
+    # dense gather_block_view path (the parity oracle).
+    decode_schedule: Optional[str] = None  # None | stream | gather
     # --- numerics / training ---
     dtype: str = "bfloat16"
     remat: str = "block"             # none | block | full

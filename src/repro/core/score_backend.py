@@ -74,6 +74,14 @@ class ScoreBackend:
       uses_x_cache       : decode cache stores raw X rows (the paper's
                            weight-stationary dataflow) instead of K rows
       quantized          : integer arithmetic inside the score path
+      supports_block_stream : paged decode can stream physical cache
+                           blocks through online softmax with a
+                           used-length early exit (kernels/
+                           paged_attention) instead of materializing the
+                           dense gather view. K-consuming backends get
+                           it generically (the projected query streams
+                           against the K pool); X-consuming backends
+                           additionally need ``stream_q``.
     """
     name: str = "?"
     needs_rope: bool = False
@@ -82,6 +90,7 @@ class ScoreBackend:
     max_d_aug: Optional[int] = None
     uses_x_cache: bool = False
     quantized: bool = False
+    supports_block_stream: bool = False
 
     # ------------------------------------------------------------- fold
     def fold(self, sw: ScoreWeights) -> ScoreWeights:
@@ -113,6 +122,16 @@ class ScoreBackend:
         x_q (B, N, D), x_kv (B, M, D) -> q (B, Gs, Rs, N, E),
         k (B, Gs, M, E) with H = Gs*Rs (models/flash.py layout)."""
         raise NotImplementedError
+
+    def stream_q(self, sw: ScoreWeights, x_q: jax.Array) -> jax.Array:
+        """Query-side stream for block-streamed paged decode (X-consuming
+        backends only): the weight-stationary first pass ``X_q W_QK``
+        over the (bias-augmented) inputs, (B, H, n, D_aug) f32, such
+        that scores == stream_q(x_q) · k_rowsᵀ (· per-row requant scale
+        for the W8A8 family) · scale. Quantized backends fold their
+        input/weight scales in here."""
+        raise NotImplementedError(
+            f"{self.name} does not stream paged decode blocks")
 
     # ------------------------------------------------------------ sizing
     def d_aug(self, cfg) -> int:
@@ -184,6 +203,7 @@ class StandardBackend(ScoreBackend):
     """Baseline: materialize Q/K via projections (rope-capable)."""
     needs_rope = True
     uses_x_cache = False
+    supports_block_stream = True    # generic: projected q vs the K pool
 
     def scores(self, x_q, x_kv, sw, *, scale, rope_fn=None):
         rep = sw.wq.shape[1] // sw.wk.shape[1]
@@ -224,9 +244,15 @@ class WqkBackend(_BilinearMixin, ScoreBackend):
     """Paper, float: S = X W_QK X^T through the folded weight (Eq. 3)."""
     folds_bias = True
     uses_x_cache = True
+    supports_block_stream = True
 
     def fold(self, sw: ScoreWeights) -> ScoreWeights:
         return sw._replace(wqk=self._folded(sw))
+
+    def stream_q(self, sw: ScoreWeights, x_q: jax.Array) -> jax.Array:
+        w, x_q = self._augmented(sw, x_q)
+        return jnp.einsum("...nd,hde->...hne", x_q.astype(jnp.float32),
+                          w.astype(jnp.float32))
 
     def scores(self, x_q, x_kv, sw, *, scale, rope_fn=None):
         w, x_q, x_kv = self._augmented(sw, x_q, x_kv)
@@ -249,6 +275,17 @@ class WqkInt8Backend(WqkBackend):
     def scores(self, x_q, x_kv, sw, *, scale, rope_fn=None):
         w, x_q, x_kv = self._augmented(sw, x_q, x_kv)
         return wqk_mod.wqk_scores_int8(x_q, x_kv, w) * scale
+
+    def stream_q(self, sw: ScoreWeights, x_q: jax.Array) -> jax.Array:
+        # integer first pass with the input/weight scales folded in; the
+        # paged stream requantizes cache rows per-token and multiplies
+        # their scales after the dot — same factors as wqk_scores_int8
+        w, x_q = self._augmented(sw, x_q)
+        qx, sx = quant.quantize(x_q, axis=-1)
+        qw, sw_ = quant.quantize_per_tensor(w)
+        g = jnp.einsum("...nd,hde->...hne", qx.astype(jnp.int32),
+                       qw.astype(jnp.int32))
+        return g.astype(jnp.float32) * sx[..., None, :, :] * sw_
 
     def blockwise_qk(self, sw, x_q, x_kv, *, dtype, rope_q=None, rope_k=None):
         # fake-quant (quantize->dequantize) reproduces the W8A8 numerics
@@ -285,6 +322,19 @@ class WqkInt8PallasBackend(WqkInt8Backend):
             return ops.scores_jnp(x_q, x_kv, w) * scale
         interpret = jax.default_backend() != "tpu"
         return ops.scores(x_q, x_kv, w, interpret=interpret) * scale
+
+    def stream_q(self, sw: ScoreWeights, x_q: jax.Array) -> jax.Array:
+        # per-HEAD weight scales (the fused kernel's quantization
+        # scheme, kernels/wqk_score/ops._quantize_workload) instead of
+        # the jnp backend's per-tensor scale
+        w, x_q = self._augmented(sw, x_q)
+        qx, sx = quant.quantize(x_q, axis=-1)
+        H = w.shape[0]
+        qw, swh = quant.quantize(w.reshape(H, -1), axis=-1)
+        g = jnp.einsum("...nd,hde->...hne", qx.astype(jnp.int32),
+                       qw.reshape(w.shape).astype(jnp.int32))
+        return g.astype(jnp.float32) * sx[..., None, :, :] \
+            * swh.reshape(H, 1, 1)
 
 
 @register_backend("factored")
@@ -324,6 +374,7 @@ class ScorePlan:
     blockwise: bool                 # flash schedule vs quadratic
     block_m: int                    # KV block for the flash schedule
     cache_mode: str                 # kv | xv | x  (decode-cache layout)
+    decode_schedule: str = "gather"  # paged decode: stream | gather
     reason: str = ""                # why the planner picked this
 
     @property
@@ -404,6 +455,22 @@ def plan(cfg, *, seq_len: Optional[int] = None,
             reason += (f"; seq_len={seq_len} >= {min_len} "
                        f"-> blockwise via {sib.name}")
 
+    # paged-decode schedule --------------------------------------------
+    # stream: block-streamed online softmax with used-length early exit
+    # (kernels/paged_attention) — decode-tick cost scales with actual
+    # sequence length. gather: materialize the dense block view (the
+    # parity oracle, and the only option for backends without stream_q).
+    sched = getattr(cfg, "decode_schedule", None)
+    if sched not in (None, "stream", "gather"):
+        raise ValueError(f"cfg.decode_schedule={sched!r}; "
+                         f"expected None | 'stream' | 'gather'")
+    if sched is None:
+        sched = "stream" if be.supports_block_stream else "gather"
+    elif sched == "stream" and not be.supports_block_stream:
+        sched = "gather"
+        reason += f"; {be.name} lacks block-stream -> gather decode"
+
     return ScorePlan(backend=be, blockwise=blockwise,
                      block_m=getattr(cfg, "attn_block_m", 1024),
-                     cache_mode=_cache_mode(cfg, be), reason=reason)
+                     cache_mode=_cache_mode(cfg, be),
+                     decode_schedule=sched, reason=reason)

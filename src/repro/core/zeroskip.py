@@ -18,19 +18,33 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bitserial import to_bitplanes
 
+# One-bit counts accumulate in int32 on device; the total over an
+# operand is bounded by N * D * bits, so the sum is exact iff that
+# product stays below 2^31. Asserted in skip_stats (any bigger workload
+# should be chunked by the caller and the per-chunk counts combined as
+# Python ints, which this module does for the final product anyway).
+_INT32_EVENT_BOUND = 2 ** 31
+
 
 class SkipStats(NamedTuple):
-    total_events: jax.Array     # word-line events without skipping
-    fired_events: jax.Array     # events where both gating bits are 1
-    bit_density_a: jax.Array    # fraction of 1-bits in xa planes
-    bit_density_b: jax.Array
+    """Counts are exact: per-row 1-bit tallies accumulate in int32
+    (bound asserted), the final sums and product are Python ints
+    (arbitrary precision — no 2^24 f32 or 2^53 f64 rounding, however
+    large the workload). Only the derived *ratios* are float64. Not
+    jit-traceable (by design: exactness requires leaving the f32
+    accumulator domain)."""
+    total_events: int           # word-line events without skipping
+    fired_events: int           # events where both gating bits are 1
+    bit_density_a: np.ndarray   # fraction of 1-bits in xa planes (f64)
+    bit_density_b: np.ndarray
 
     @property
     def skip_fraction(self):
-        return 1.0 - self.fired_events / jnp.maximum(self.total_events, 1)
+        return 1.0 - self.fired_events / max(self.total_events, 1)
 
 
 def skip_stats(xa: jax.Array, xb: jax.Array, bits: int = 8) -> SkipStats:
@@ -44,23 +58,30 @@ def skip_stats(xa: jax.Array, xb: jax.Array, bits: int = 8) -> SkipStats:
 
     xa (Na, D) int8, xb (Nb, D) int8.
     """
-    pa = to_bitplanes(xa, bits).astype(jnp.float32)   # (Na, D, K)
-    pb = to_bitplanes(xb, bits).astype(jnp.float32)
-    ones_a = jnp.sum(pa, axis=(-1, -2))               # per-row 1-bit count
-    ones_b = jnp.sum(pb, axis=(-1, -2))
-    fired = jnp.sum(ones_a) * jnp.sum(ones_b)         # sum_{i,j} n_a(i)n_b(j)
     Na, D = xa.shape[-2], xa.shape[-1]
     Nb = xb.shape[-2]
-    total = jnp.asarray(float(Na) * Nb * D * D * bits * bits)
-    return SkipStats(total, fired,
-                     jnp.mean(pa), jnp.mean(pb))
+    for n, name in ((Na, "xa"), (Nb, "xb")):
+        if n * D * bits >= _INT32_EVENT_BOUND:
+            raise ValueError(
+                f"{name}: {n} x {D} x {bits} one-bit events can exceed "
+                f"int32 — chunk the input and combine per-chunk counts")
+    pa = to_bitplanes(xa, bits)                       # (Na, D, K) uint8
+    pb = to_bitplanes(xb, bits)
+    ones_a = jnp.sum(pa.astype(jnp.int32), axis=(-1, -2))  # per-row count
+    ones_b = jnp.sum(pb.astype(jnp.int32), axis=(-1, -2))
+    sa = int(jnp.sum(ones_a))                         # exact (bound above)
+    sb = int(jnp.sum(ones_b))
+    return SkipStats(Na * Nb * D * D * bits * bits,   # exact Python ints
+                     sa * sb,
+                     np.float64(sa) / (Na * D * bits),
+                     np.float64(sb) / (Nb * D * bits))
 
 
-def cycles_with_skip(stats: SkipStats, lanes: int = 64) -> jax.Array:
+def cycles_with_skip(stats: SkipStats, lanes: int = 64) -> float:
     """Macro cycles with zero-skip: only fired events consume add cycles;
     `lanes` parallel adder columns (64 in the paper's 64x64 array)."""
     return stats.fired_events / lanes
 
 
-def cycles_without_skip(stats: SkipStats, lanes: int = 64) -> jax.Array:
+def cycles_without_skip(stats: SkipStats, lanes: int = 64) -> float:
     return stats.total_events / lanes

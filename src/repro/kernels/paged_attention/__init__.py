@@ -1,0 +1,4 @@
+"""Block-streamed paged decode attention (vLLM-PagedAttention dataflow):
+kernel.py (Pallas, gather-through-the-block-table inside the kernel),
+ref.py (length-proportional jnp while-loop twin), ops.py (dispatch)."""
+from repro.kernels.paged_attention.ops import paged_attend  # noqa: F401

@@ -1,0 +1,191 @@
+"""Pallas block-streamed paged decode attention kernel.
+
+The vLLM-PagedAttention dataflow on the TPU grid: one (sequence, logical
+block) program per grid step, with the block table and per-sequence
+``blocks_used`` as **scalar-prefetch** operands so the BlockSpec index
+maps gather each physical K/V-or-X block straight out of the pooled
+cache — the (B, nbk·BS, ...) logical view never materializes in HBM.
+
+Early exit past a sequence's live length is two-level, mirroring the
+paper's skip hierarchy (§III.C — skip whole all-zero structures first):
+
+  * the index map redirects blocks ``j >= blocks_used[b]`` to physical
+    block 0 (the engine's null block), so the pipeline never fetches
+    dead cache lines, and
+  * ``pl.when(j < blocks_used[b])`` skips their compute entirely.
+
+Within a live block the online-softmax state (m, l, acc) persists in
+VMEM scratch across the sequential j steps (same schedule as
+kernels/flash_scores). int8 pools (the macro's 8-bit input format)
+dequantize in-kernel from their per-row scales; ``augment``/``requant``
+reproduce the folded-bias [X 1] augmentation and the W8A8 re-quantization
+of the score path, via the same helpers as the jnp reference (ref.py) so
+the two cannot drift.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.paged_attention.ref import (NEG_INF, _block_values,
+                                               _dequant_rows, _score_k)
+
+BIG_WINDOW = 1 << 30
+
+
+def _kernel(tables_ref, used_ref, qpos_ref, win_ref, *refs,
+            BS: int, G: int, Hkv: int, H: int, n: int, dv: int,
+            scale: float, softcap: float, augment: bool, requant: bool,
+            has_ks: bool, has_v: bool, has_vs: bool, has_wv: bool,
+            has_bv: bool):
+    it = iter(refs)
+    q_ref = next(it)
+    k_ref = next(it)
+    ks_ref = next(it) if has_ks else None
+    v_ref = next(it) if has_v else None
+    vs_ref = next(it) if has_vs else None
+    wv_ref = next(it) if has_wv else None
+    bv_ref = next(it) if has_bv else None
+    o_ref = next(it)
+    m_sc, l_sc, acc_sc = next(it), next(it), next(it)
+
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(j < used_ref[b])
+    def _compute():
+        rep = H // G
+        kdeq = _dequant_rows(
+            k_ref[0], None if ks_ref is None else ks_ref[0])
+        keff, srow = _score_k(kdeq, augment, requant)    # (BS,G,E),(BS,G)
+        q = q_ref[0].astype(jnp.float32)                 # (H, n, E)
+        s = jnp.einsum("grne,sge->grns", q.reshape(G, rep, n, -1), keff)
+        if srow is not None:
+            s = s * srow.T[:, None, None, :]
+        s = s.reshape(H, n, BS) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+
+        idx = j * BS + jax.lax.broadcasted_iota(jnp.int32, (n, BS), 1)
+        # (n, BS) query-position grid, element-wise reads from SMEM
+        qcol = jnp.concatenate(
+            [jnp.full((1, BS), qpos_ref[b, i], jnp.int32)
+             for i in range(n)], axis=0)
+        ok = idx <= qcol
+        ok = ok & (idx > qcol - win_ref[0])
+        s = s + jnp.where(ok, 0.0, NEG_INF)[None, :, :]
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=-1)
+        v = _block_values(
+            kdeq, None if v_ref is None else v_ref[0],
+            None if vs_ref is None else vs_ref[0],
+            None if wv_ref is None else wv_ref[...],
+            None if bv_ref is None else bv_ref[...])     # (BS, Hkv, dv)
+        pg = p.reshape(Hkv, H // Hkv, n, BS)
+        pv = jnp.einsum("grns,sge->grne", pg, v).reshape(H, n, dv)
+        acc_sc[...] = acc_sc[...] * alpha[..., None] + pv
+        m_sc[...] = m_new
+        # write the running normalized output every live step: the last
+        # live j (== used[b]-1) leaves the final value in the buffer, so
+        # no data-dependent "final step" predicate is needed
+        o_ref[0] = acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)[..., None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "softcap", "augment", "requant",
+                              "interpret"))
+def paged_attend_pallas(q: jax.Array, k_pool: jax.Array,
+                        tables: jax.Array, blocks_used: jax.Array,
+                        qpos: jax.Array, *,
+                        v_pool: Optional[jax.Array] = None,
+                        k_scale: Optional[jax.Array] = None,
+                        v_scale: Optional[jax.Array] = None,
+                        wv: Optional[jax.Array] = None,
+                        bv: Optional[jax.Array] = None,
+                        scale: float = 1.0,
+                        window=None,
+                        softcap: float = 0.0,
+                        augment: bool = False,
+                        requant: bool = False,
+                        interpret: bool = False) -> jax.Array:
+    """Same contract as ``ref.paged_attend_ref`` (see there for shapes);
+    runs the gather-inside-the-kernel Pallas schedule. ``window`` may be
+    a traced scalar (per-layer scan) — it rides in as a scalar-prefetch
+    operand, not a static arg."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, H, n, E = q.shape
+    NB, BS, G = k_pool.shape[:3]
+    nbk = tables.shape[1]
+    Hkv = v_pool.shape[2] if v_pool is not None else wv.shape[1]
+    dv = v_pool.shape[3] if v_pool is not None else wv.shape[2]
+    used = jnp.clip(blocks_used.astype(jnp.int32), 1, nbk)
+    win = jnp.asarray(
+        BIG_WINDOW if window is None else window).astype(jnp.int32)
+    win = win.reshape(1)
+
+    # physical block for (b, j): the table entry while live, the null
+    # block past the sequence's used length (cheap, never computed on)
+    def kmap(b, j, tables_ref, used_ref, qpos_ref, win_ref):
+        return (jnp.where(j < used_ref[b], tables_ref[b, j], 0), 0, 0, 0)
+
+    operands = [q, k_pool]
+    in_specs = [
+        pl.BlockSpec((1, H, n, E),
+                     lambda b, j, *_: (b, 0, 0, 0)),
+        pl.BlockSpec((1, BS, G, k_pool.shape[3]), kmap),
+    ]
+    if k_scale is not None:
+        operands.append(k_scale)
+        in_specs.append(pl.BlockSpec((1, BS, G, 1), kmap))
+    if v_pool is not None:
+        operands.append(v_pool)
+        in_specs.append(pl.BlockSpec((1, BS, Hkv, dv), kmap))
+    if v_scale is not None:
+        operands.append(v_scale)
+        in_specs.append(pl.BlockSpec((1, BS, Hkv, 1), kmap))
+    if wv is not None:
+        operands.append(wv)
+        in_specs.append(pl.BlockSpec(wv.shape, lambda b, j, *_: (0, 0, 0)))
+    if bv is not None:
+        operands.append(bv)
+        in_specs.append(pl.BlockSpec(bv.shape, lambda b, j, *_: (0, 0)))
+
+    kern = functools.partial(
+        _kernel, BS=BS, G=G, Hkv=Hkv, H=H, n=n, dv=dv, scale=scale,
+        softcap=softcap, augment=augment, requant=requant,
+        has_ks=k_scale is not None, has_v=v_pool is not None,
+        has_vs=v_scale is not None, has_wv=wv is not None,
+        has_bv=bv is not None)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, nbk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, H, n, dv), lambda b, j, *_: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, n), jnp.float32),
+            pltpu.VMEM((H, n), jnp.float32),
+            pltpu.VMEM((H, n, dv), jnp.float32),
+        ])
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, n, dv), jnp.float32),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), used, qpos.astype(jnp.int32), win,
+      *operands)

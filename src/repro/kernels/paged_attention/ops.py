@@ -1,0 +1,55 @@
+"""Public entry point for block-streamed paged decode attention.
+
+``paged_attend`` picks the implementation:
+
+  * ``"pallas"`` — the gather-inside-the-kernel Pallas schedule
+    (kernel.py). Default on TPU; off-TPU it runs in interpret mode
+    (slow — CI correctness only).
+  * ``"jnp"``    — the while-loop reference (ref.py) whose trip count is
+    ``max(blocks_used)``: genuinely length-proportional work under jit.
+    Default everywhere Pallas isn't native — this is the production
+    CPU/GPU decode path, not just an oracle.
+
+Both share the per-block transform helpers, so their numerics agree;
+the dense ``gather_block_view`` path in models/attention.py remains the
+parity oracle for both.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.paged_attention import kernel as _kernel
+from repro.kernels.paged_attention import ref as _ref
+
+
+def paged_attend(q: jax.Array, k_pool: jax.Array, tables: jax.Array,
+                 blocks_used: jax.Array, qpos: jax.Array, *,
+                 v_pool: Optional[jax.Array] = None,
+                 k_scale: Optional[jax.Array] = None,
+                 v_scale: Optional[jax.Array] = None,
+                 wv: Optional[jax.Array] = None,
+                 bv: Optional[jax.Array] = None,
+                 scale: float = 1.0,
+                 window=None,
+                 softcap: float = 0.0,
+                 augment: bool = False,
+                 requant: bool = False,
+                 impl: str = "auto",
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Shapes and semantics: see ``ref.paged_attend_ref``."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    kwargs = dict(v_pool=v_pool, k_scale=k_scale, v_scale=v_scale,
+                  wv=wv, bv=bv, scale=scale, window=window,
+                  softcap=softcap, augment=augment, requant=requant)
+    if impl == "jnp":
+        return _ref.paged_attend_ref(q, k_pool, tables, blocks_used,
+                                     qpos, **kwargs)
+    if impl != "pallas":
+        raise ValueError(f"unknown paged_attend impl {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel.paged_attend_pallas(q, k_pool, tables, blocks_used,
+                                       qpos, interpret=interpret, **kwargs)

@@ -1,0 +1,155 @@
+"""jnp reference for block-streamed paged decode attention.
+
+This is the production path off-TPU (ops.py dispatches here on CPU) and
+the numerics twin of the Pallas kernel: both gather K/V-or-X blocks
+through the block table *inside* the attention loop, run online softmax
+per block, and stop at the longest live sequence's ``blocks_used`` —
+the block-granular transplant of the paper's hierarchical zero-value
+skipping (§III.C): whole untouched cache blocks are never read, exactly
+as the macro never fires word lines for all-zero operands.
+
+Length proportionality comes from ``lax.while_loop`` with a
+data-dependent trip count ``max(blocks_used)``: one compiled graph
+whose per-tick work scales with the *actual* longest sequence in the
+batch instead of ``max_len`` (the dense ``gather_block_view`` path
+materializes and scores all ``nbk * BS`` positions every tick).
+
+Per-sequence raggedness inside the loop is handled by masking: a block
+``j >= blocks_used[b]`` contributes ``NEG_INF`` scores, which the
+online softmax turns into exact zeros — identical arithmetic to the
+dense path's additive mask, so the two schedules agree to fp
+tolerance (and bit-equal greedy outputs).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _dequant_rows(blk: jax.Array, scale: Optional[jax.Array]) -> jax.Array:
+    """(..., BS, G, E) int8/float + optional (..., BS, G, 1) scales -> f32."""
+    x = blk.astype(jnp.float32)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    return x
+
+
+def _score_k(kdeq: jax.Array, augment: bool, requant: bool):
+    """Score-side K rows from dequantized cache rows (..., BS, G, Ek).
+
+    augment: append the constant-1 feature matching a bias-folded W_QK
+    (the [X 1] augmentation happens on the *dequantized* row, exactly as
+    the dense oracle augments the ``read_x`` view).
+    requant: re-quantize each augmented row to int8 (per-row symmetric,
+    the W8A8 score path) — returns (k_eff f32-of-ints, row_scale) so the
+    caller multiplies scores by ``row_scale`` after the dot.
+    """
+    if augment:
+        ones = jnp.ones(kdeq.shape[:-1] + (1,), kdeq.dtype)
+        kdeq = jnp.concatenate([kdeq, ones], axis=-1)
+    if requant:
+        from repro.core import quant
+        qk, sk = quant.quantize(kdeq, axis=-1)
+        return qk.astype(jnp.float32), sk[..., 0]
+    return kdeq, None
+
+
+def _block_values(kdeq, vblk, vscale, wv, bv):
+    """V rows for one block: the V pool (dequantized) or — pure-X mode —
+    recomputed from the dequantized X rows streaming through wv (the
+    paper's weight-stationary dataflow: one X read serves S and V)."""
+    if vblk is not None:
+        return _dequant_rows(vblk, vscale)
+    v = jnp.einsum("...sd,dhe->...she", kdeq[..., 0, :],
+                   wv.astype(jnp.float32))
+    if bv is not None:
+        v = v + bv.astype(jnp.float32)
+    return v
+
+
+def paged_attend_ref(q: jax.Array, k_pool: jax.Array, tables: jax.Array,
+                     blocks_used: jax.Array, qpos: jax.Array, *,
+                     v_pool: Optional[jax.Array] = None,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
+                     wv: Optional[jax.Array] = None,
+                     bv: Optional[jax.Array] = None,
+                     scale: float = 1.0,
+                     window=None,
+                     softcap: float = 0.0,
+                     augment: bool = False,
+                     requant: bool = False) -> jax.Array:
+    """Block-streamed paged decode attention (online softmax).
+
+    q (B, H, n, E) f32   : projected queries (kv layout) or the
+                           weight-stationary first pass X W_QK (x layout;
+                           int8 backends fold their input/weight scales in)
+    k_pool (NB, BS, G, Ek): physical block pool; G in {1 (shared X
+                           stream), Hkv}; Ek = E - 1 when ``augment``
+    tables (B, nbk) i32  : logical block j of sequence b -> physical id
+    blocks_used (B,) i32 : live blocks per sequence; the stream stops at
+                           max(blocks_used) and masks past each one's own
+    qpos (B, n) i32      : query positions (each attends idx <= its own)
+    v_pool (NB, BS, Hkv, dv) (+ v_scale) or wv (Ek, Hkv, dv) (+ bv)
+    -> out (B, H, n, dv) f32
+    """
+    B, H, n, E = q.shape
+    NB, BS, G = k_pool.shape[:3]
+    nbk = tables.shape[1]
+    Hkv = v_pool.shape[2] if v_pool is not None else wv.shape[1]
+    dv = v_pool.shape[3] if v_pool is not None else wv.shape[2]
+    rep = H // G
+    used = jnp.clip(blocks_used.astype(jnp.int32), 1, nbk)
+    jmax = jnp.max(used)
+    win = None if window is None else jnp.asarray(window)
+    qf = q.astype(jnp.float32)
+
+    def body(state):
+        j, m, l, acc = state
+        bids = jax.lax.dynamic_index_in_dim(tables, j, axis=1,
+                                            keepdims=False)       # (B,)
+        # a sequence shorter than the batch max streams the null block
+        # (finite engine-written garbage, fully masked below) instead of
+        # its dead table entries — same redirect as the Pallas index map
+        bids = jnp.where(j < used, bids, 0)
+        kblk = jnp.take(k_pool, bids, axis=0)          # (B, BS, G, Ek)
+        ks = None if k_scale is None else jnp.take(k_scale, bids, axis=0)
+        kdeq = _dequant_rows(kblk, ks)
+        keff, srow = _score_k(kdeq, augment, requant)  # (B,BS,G,E),(B,BS,G)
+        qg = qf.reshape(B, G, rep, n, E)
+        s = jnp.einsum("bgrne,bsge->bgrns", qg, keff)  # (B,G,rep,n,BS)
+        if srow is not None:
+            s = s * srow.transpose(0, 2, 1)[:, :, None, None, :]
+        s = s.reshape(B, H, n, BS) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        idx = j * BS + jnp.arange(BS)[None, None, :]             # (1,1,BS)
+        ok = idx <= qpos[:, :, None]
+        if win is not None:
+            ok = ok & (idx > qpos[:, :, None] - win)
+        ok = ok & (j < used)[:, None, None]
+        s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, :, :]
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))              # (B,H,n)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+
+        vblk = None if v_pool is None else jnp.take(v_pool, bids, axis=0)
+        vs = None if v_scale is None else jnp.take(v_scale, bids, axis=0)
+        v = _block_values(kdeq, vblk, vs, wv, bv)      # (B, BS, Hkv, dv)
+        pg = p.reshape(B, Hkv, H // Hkv, n, BS)
+        pv = jnp.einsum("bgrns,bsge->bgrne", pg, v).reshape(B, H, n, dv)
+        acc_new = acc * alpha[..., None] + pv
+        return j + 1, m_new, l_new, acc_new
+
+    state = (jnp.zeros((), jnp.int32),
+             jnp.full((B, H, n), NEG_INF, jnp.float32),
+             jnp.zeros((B, H, n), jnp.float32),
+             jnp.zeros((B, H, n, dv), jnp.float32))
+    _, m, l, acc = jax.lax.while_loop(lambda st: st[0] < jmax, body, state)
+    return acc / jnp.maximum(l, 1e-30)[..., None]

@@ -63,6 +63,16 @@ def main():
                     help="chunked-prefill chunk size (default 4x block)")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable copy-on-write prompt-prefix block sharing")
+    ap.add_argument("--decode-schedule", default="auto",
+                    choices=("auto", "stream", "gather"),
+                    help="paged decode schedule: 'stream' = block-"
+                         "streamed online softmax with used-length early "
+                         "exit (tick cost ~ actual length); 'gather' = "
+                         "dense logical view (parity oracle); 'auto' "
+                         "follows the score planner")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for all requests "
+                         "(0 = greedy; >0 = categorical, seeded)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -87,7 +97,8 @@ def main():
                  max_len=args.max_len, paged=args.paged,
                  block_size=args.block_size, hbm_bytes=hbm,
                  prefill_chunk=args.prefill_chunk,
-                 prefix_sharing=not args.no_prefix_sharing)
+                 prefix_sharing=not args.no_prefix_sharing,
+                 decode_schedule=args.decode_schedule)
     if eng.plan is not None:
         budget = kvcache.budget_for(cfg)
         print(f"[serve] score backend {eng.plan.backend.name!r} "
@@ -102,7 +113,8 @@ def main():
               f"blocks x {args.block_size} tokens "
               f"({pb.bytes_per_block} B/block); chunked prefill "
               f"C={eng.prefill_chunk}; prefix sharing "
-              f"{'on' if eng.prefix_sharing else 'off'}")
+              f"{'on' if eng.prefix_sharing else 'off'}; decode "
+              f"schedule {eng.decode_schedule!r}")
     else:
         print("[serve] dense cache pool "
               f"[{args.slots} slots x {args.max_len} tokens]")
@@ -112,7 +124,7 @@ def main():
         toks = [1] + rng.integers(3, cfg.vocab_size,
                                   rng.integers(2, 9)).tolist()
         r = Request(rid=i, tokens=toks, max_new_tokens=args.max_new,
-                    eos_id=None)
+                    eos_id=None, temperature=args.temperature)
         if cfg.enc_dec:
             r.tokens = [1]
             r.enc_embeds = frontends.audio_frames(1, 64, cfg.d_model,
@@ -122,8 +134,13 @@ def main():
     eng.run(reqs)
     dt = time.time() - t0
     tok = sum(len(r.output) for r in reqs)
+    reasons = {}
+    for r in reqs:
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
     print(f"[serve] {len(reqs)} reqs, {tok} tokens, {eng.ticks} ticks, "
-          f"{dt:.1f}s ({tok/dt:.1f} tok/s)")
+          f"{dt:.1f}s ({tok/dt:.1f} tok/s); finish reasons: "
+          + ", ".join(f"{k}={v}" for k, v in sorted(reasons.items(),
+                                                    key=lambda kv: str(kv[0]))))
 
 
 if __name__ == "__main__":

@@ -413,10 +413,51 @@ def _decode_attend(p: dict, x_new: jax.Array, q, view: KVCache,
     return jnp.einsum("bhne,hed->bnd", o, p["wo"].astype(dt))
 
 
+def _decode_attend_streamed(p: dict, x_new: jax.Array, q, pool: KVCache,
+                            tables: jax.Array, blocks_used: jax.Array,
+                            qpos: jax.Array, cfg, be,
+                            window: Optional[int]) -> jax.Array:
+    """Block-streamed decode attention (kernels/paged_attention): the
+    physical pool is gathered block-by-block through the table inside
+    the attention loop, online-softmaxed, and the stream stops at the
+    batch's longest ``blocks_used`` — tick cost scales with actual
+    sequence length, not the table capacity. Numerics twin of
+    ``_decode_attend`` over ``gather_block_view`` (the parity oracle).
+    """
+    from repro.kernels.paged_attention import paged_attend
+    dh = cfg.head_dim
+    scale = 1.0 / math.sqrt(dh)
+    dt = x_new.dtype
+    softcap = float(cfg.logit_softcap or 0.0)
+
+    if not be.uses_x_cache:
+        o = paged_attend(q.astype(jnp.float32), pool.k, tables,
+                         blocks_used, qpos, v_pool=pool.v,
+                         k_scale=pool.ks, v_scale=pool.vs, scale=scale,
+                         window=window, softcap=softcap)
+    else:
+        qe = be.stream_q(score_weights(p), x_new)       # (B, H, n, Daug)
+        aug = qe.shape[-1] == pool.x.shape[-1] + 1
+        kp = pool.x[:, :, None, :]                      # shared X stream
+        ks = None if pool.xs is None else pool.xs[:, :, None, :]
+        common = dict(k_scale=ks, scale=scale, window=window,
+                      softcap=softcap, augment=aug, requant=be.quantized)
+        if pool.v is not None:
+            o = paged_attend(qe, kp, tables, blocks_used, qpos,
+                             v_pool=pool.v, v_scale=pool.vs, **common)
+        else:                       # pure-X: V recomputed block-by-block
+            o = paged_attend(qe, kp, tables, blocks_used, qpos,
+                             wv=p["wv"].astype(jnp.float32),
+                             bv=None if "bv" not in p else
+                             p["bv"].astype(jnp.float32), **common)
+    return jnp.einsum("bhne,hed->bnd", o.astype(dt), p["wo"].astype(dt))
+
+
 def attention_decode_paged(p: dict, x_new: jax.Array, pool: KVCache,
                            tables: jax.Array, pos: jax.Array, cfg, *,
                            window: Optional[int] = None,
-                           backend=None):
+                           backend=None,
+                           blocks_used: Optional[jax.Array] = None):
     """Decode/chunked-prefill attention through a paged cache.
 
     x_new (B, n, D): n new tokens per sequence at positions
@@ -425,10 +466,23 @@ def attention_decode_paged(p: dict, x_new: jax.Array, pool: KVCache,
     Returns (out (B, n, D), new_pool).
 
     Writes go first (scatter at the new positions' physical slots),
-    then the view is gathered, so each query attends positions
-    <= its own — identically to the dense path. Positions beyond the
-    view (chunk padding past the table) write to the null block and are
-    never read back.
+    then reads follow one of two schedules:
+
+      * **stream**: physical blocks stream through online softmax with
+        a per-sequence ``blocks_used`` early exit — tick cost is O(max
+        used length). Engaged by passing ``blocks_used`` (B,) int32 =
+        live blocks per sequence (the caller's explicit request; the
+        serving engine passes it when its resolved schedule is
+        'stream', which defaults to the planner's ``decode_schedule``).
+        Backends without block-stream support ignore it and gather.
+      * **gather** (the parity oracle, blocks_used=None): materialize
+        the dense (B, nbk*BS, ...) logical view and run the same
+        masked-softmax formula as the dense cache path.
+
+    Both schedules let each query attend positions <= its own, so
+    chunked prefill (n=C) and decode ticks (n=1) are the same graph.
+    Positions beyond the view (chunk padding past the table) write to
+    the null block and are never read back.
     """
     from repro.serving.paged import NULL_BLOCK
     be = sb.plan(cfg, backend=backend).backend
@@ -454,8 +508,12 @@ def attention_decode_paged(p: dict, x_new: jax.Array, pool: KVCache,
         if pool.v is not None:
             new_pool = paged_write_kv(new_pool, None, _project_v_rows(
                 p, x_new), bids, offs)
-    view = gather_block_view(new_pool, tables)
-    out = _decode_attend(p, x_new, q, view, qpos, cfg, be, window)
+    if blocks_used is not None and be.supports_block_stream:
+        out = _decode_attend_streamed(p, x_new, q, new_pool, tables,
+                                      blocks_used, qpos, cfg, be, window)
+    else:
+        view = gather_block_view(new_pool, tables)
+        out = _decode_attend(p, x_new, q, view, qpos, cfg, be, window)
     return out, new_pool
 
 

@@ -310,7 +310,8 @@ class Model:
             [attn.init_kv_cache(cfg, num_blocks, block_size, dt)
              for _ in range(cfg.num_layers)])}
 
-    def decode_paged(self, p, cache, tables, tokens, pos):
+    def decode_paged(self, p, cache, tables, tokens, pos,
+                     blocks_used=None):
         """n tokens per sequence through the paged cache — the single
         static-shape graph serving both chunked prefill (n = chunk) and
         decode ticks (n = 1).
@@ -319,6 +320,13 @@ class Model:
         tables (B, nbk) block tables. Returns (logits (B, n, V), cache);
         the caller indexes the logits row of the last real token
         (trailing rows of a padded final chunk are discarded).
+
+        blocks_used (B,) int32 (optional): live blocks per sequence,
+        covering every written position (ceil((pos + n)/block_size)).
+        When given — and the planned backend supports the streamed
+        schedule — attention streams physical blocks with a used-length
+        early exit instead of gathering the full logical view, so tick
+        cost scales with actual sequence length instead of max_len.
         """
         cfg = self.cfg
         x = layers.embed(tokens, p["embed"])
@@ -336,7 +344,8 @@ class Model:
             hn = layers.norm(h, pl["ln1"], cfg.norm)
             a, kv2 = attn.attention_decode_paged(
                 pl["attn"], hn, kv, tables, pos,
-                transformer._with_theta(cfg, th), window=win)
+                transformer._with_theta(cfg, th), window=win,
+                blocks_used=blocks_used)
             h = h + a
             hn2 = layers.norm(h, pl["ln2"], cfg.norm)
             if "moe" in pl:

@@ -25,7 +25,20 @@ so the engine compiles exactly two shapes — ``(1, chunk)`` and
 ``(max_slots, 1)`` — instead of one prefill graph per prompt-length
 bucket. Eviction frees blocks back to the allocator.
 
-Greedy or temperature sampling; deterministic given the seed.
+Paged decode runs one of two schedules (``decode_schedule``): the
+default **stream** schedule passes per-slot used lengths
+(``ceil((pos+1)/block_size)``) into the decode graph, which streams
+physical blocks through online softmax and early-exits past the
+longest live sequence — tick cost scales with actual sequence length,
+not ``max_len``. **gather** forces the dense logical-view path (the
+parity oracle).
+
+Sampling is greedy at ``Request.temperature == 0`` and categorical at
+``temperature > 0`` (per-slot; logits scaled by the temperature);
+deterministic given the seed either way. Every finished request
+records ``finish_reason``: ``"eos"`` (sampled its eos_id), ``"length"``
+(max_new_tokens reached), or ``"truncated"`` (hit the ``max_len - 1``
+context wall with budget left).
 """
 from __future__ import annotations
 
@@ -49,6 +62,7 @@ class Request:
     # engine-filled:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None    # eos | length | truncated
 
 
 def _bucket(n: int) -> int:
@@ -65,7 +79,8 @@ class Engine:
                  num_blocks: Optional[int] = None,
                  hbm_bytes: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 decode_schedule: str = "auto"):
         self.model, self.params = model, params
         self.max_slots, self.max_len = max_slots, max_len
         cfg = model.cfg
@@ -79,6 +94,20 @@ class Engine:
             raise ValueError(
                 f"paged cache unsupported for family {cfg.family!r}")
         self.paged = model.supports_paged() if paged is None else bool(paged)
+        if decode_schedule not in ("auto", "stream", "gather"):
+            raise ValueError(
+                f"decode_schedule={decode_schedule!r}; expected "
+                f"'auto' | 'stream' | 'gather'")
+        if decode_schedule == "stream":
+            if not self.paged:
+                raise ValueError("decode_schedule='stream' requires the "
+                                 "paged cache")
+            if self.plan is None \
+                    or not self.plan.backend.supports_block_stream:
+                raise ValueError(
+                    f"decode_schedule='stream' but backend "
+                    f"{self.plan.backend.name if self.plan else None!r} "
+                    f"does not support block streaming")
 
         self.pos = np.zeros(max_slots, np.int32)          # next position
         self.last_tok = np.zeros(max_slots, np.int32)
@@ -101,6 +130,13 @@ class Engine:
             self.allocator = paged_lib.BlockAllocator(num_blocks, block_size)
             self.prefill_chunk = prefill_chunk or 4 * block_size
             self.prefix_sharing = prefix_sharing
+            # 'auto' follows the planner (cfg.decode_schedule override
+            # included); explicit 'stream'/'gather' wins — streaming is
+            # engaged by actually passing blocks_used into the graph,
+            # so the override is real either way
+            planned = self.plan.decode_schedule if self.plan else "gather"
+            self.decode_schedule = planned if decode_schedule == "auto" \
+                else decode_schedule
             self.pool = model.init_paged_cache(num_blocks, block_size)
             self.tables = np.zeros((max_slots, self.blocks_per_seq),
                                    np.int32)
@@ -109,6 +145,7 @@ class Engine:
                 [None] * max_slots
             self._decode_paged = jax.jit(model.decode_paged)
         else:
+            self.decode_schedule = "gather"      # dense pool: no paging
             self.cache = model.init_cache(max_slots, max_len)
             self._decode = jax.jit(model.decode_step)
             self._prefills: Dict[int, Callable] = {}
@@ -142,9 +179,11 @@ class Engine:
         # (max_new_tokens <= 1, or EOS straight out of prefill) — finish
         # now instead of letting a tick append a second token
         tok = req.output[-1]
-        if (req.eos_id is not None and tok == req.eos_id) \
-                or len(req.output) >= req.max_new_tokens:
-            req.done = True
+        if req.eos_id is not None and tok == req.eos_id:
+            req.done, req.finish_reason = True, "eos"
+            self._evict(slot)
+        elif len(req.output) >= req.max_new_tokens:
+            req.done, req.finish_reason = True, "length"
             self._evict(slot)
         else:
             self._note_active()
@@ -174,7 +213,7 @@ class Engine:
             batch["enc_embeds"] = jnp.asarray(req.enc_embeds)  # type: ignore
         logits, cache1 = self._prefill_fn(b)(self.params, batch)
         self._copy_slot(cache1, slot)
-        tok = self._sample(logits)[0]
+        tok = self._sample(logits, [req.temperature])[0]
         req.output.append(int(tok))
         self.slot_req[slot] = req
         self.pos[slot] = plen
@@ -256,9 +295,11 @@ class Engine:
             buf[0, :len(chunk)] = chunk
             logits, self.pool = self._decode_paged(
                 self.params, self.pool, trow, jnp.asarray(buf),
-                jnp.asarray([c0], np.int32))
+                jnp.asarray([c0], np.int32),
+                self._blocks_used(np.asarray([c0 + C - 1])))
             last_c0 = c0
-        tok = self._sample(logits[:, plen - 1 - last_c0])[0]
+        tok = self._sample(logits[:, plen - 1 - last_c0],
+                           [req.temperature])[0]
         req.output.append(int(tok))
         self.slot_req[slot] = req
         self.pos[slot] = plen
@@ -277,10 +318,29 @@ class Engine:
             self._tables_dev = None
 
     # -------------------------------------------------------------- tick
-    def _sample(self, logits) -> np.ndarray:
+    def _blocks_used(self, last_pos: np.ndarray):
+        """Per-slot live block counts covering every position up to
+        ``last_pos`` — the streamed schedule's early-exit bound. None on
+        the gather path (the graph then materializes the full view)."""
+        if self.decode_schedule != "stream":
+            return None
+        used = last_pos // self.block_size + 1
+        return jnp.asarray(np.clip(used, 1, self.blocks_per_seq),
+                           np.int32)
+
+    def _sample(self, logits, temps) -> np.ndarray:
+        """Next token per row: greedy where ``temps[i] == 0``, else
+        categorical over ``logits / temp`` — deterministic under the
+        engine seed (one RNG split per sampling call either way)."""
         self.rng, k = jax.random.split(self.rng)
         greedy = jnp.argmax(logits, axis=-1)
-        return np.asarray(greedy, np.int32)
+        t = np.asarray(temps, np.float32)
+        if not (t > 0).any():
+            return np.asarray(greedy, np.int32)
+        tj = jnp.asarray(t)
+        safe = jnp.where(tj > 0, tj, 1.0)[:, None]
+        drawn = jax.random.categorical(k, logits / safe, axis=-1)
+        return np.asarray(jnp.where(tj > 0, drawn, greedy), np.int32)
 
     def tick(self):
         """One decode step for all slots (inactive slots decode garbage
@@ -296,12 +356,13 @@ class Engine:
                 self._tables_dev = jnp.asarray(self.tables)
             logits, self.pool = self._decode_paged(
                 self.params, self.pool, self._tables_dev,
-                toks[:, None], pos)
+                toks[:, None], pos, self._blocks_used(self.pos))
             logits = logits[:, 0]
         else:
             logits, self.cache = self._decode(self.params, self.cache,
                                               toks, pos)
-        nxt = self._sample(logits)
+        nxt = self._sample(logits, [0.0 if r is None else r.temperature
+                                    for r in self.slot_req])
         self.ticks += 1
         for s, req in enumerate(self.slot_req):
             if req is None:
@@ -310,9 +371,15 @@ class Engine:
             tok = int(nxt[s])
             req.output.append(tok)
             self.last_tok[s] = tok
-            hit_eos = req.eos_id is not None and tok == req.eos_id
-            if hit_eos or len(req.output) >= req.max_new_tokens \
-                    or self.pos[s] >= self.max_len - 1:
+            if req.eos_id is not None and tok == req.eos_id:
+                req.finish_reason = "eos"
+            elif len(req.output) >= req.max_new_tokens:
+                req.finish_reason = "length"
+            elif self.pos[s] >= self.max_len - 1:
+                # context wall: out of cache positions with new-token
+                # budget left — distinguishable from natural completion
+                req.finish_reason = "truncated"
+            if req.finish_reason is not None:
                 req.done = True
                 self._evict(s)
 

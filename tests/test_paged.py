@@ -127,19 +127,168 @@ def test_paged_engine_matches_dense(score_mode):
         assert x.output == y.output, (x.rid, x.output, y.output)
 
 
-def test_paged_logits_match_dense(setup):
+@pytest.mark.parametrize("schedule", ["gather", "stream"])
+def test_paged_logits_match_dense(setup, schedule):
     """Per-token logits through the paged graph match the dense
     prefill+decode path to fp tolerance (incl. a chunk-crossing
-    prompt). Runs the same harness as the CI serving acceptance check
-    (benchmarks.serving_load) so the two cannot drift apart."""
+    prompt) — on BOTH decode schedules: the dense gather view and the
+    block-streamed early-exit path. Runs the same harness as the CI
+    serving acceptance check (benchmarks.serving_load) so the two
+    cannot drift apart."""
     from benchmarks.serving_load import paged_vs_dense_logits
     model, params = setup
     prompt = [1] + list(range(5, 22))            # 18 tokens, chunks of 8
     ref, got = paged_vs_dense_logits(model, params, prompt, max_len=48,
-                                     block_size=4, chunk=8, steps=4)
+                                     block_size=4, chunk=8, steps=4,
+                                     schedule=schedule)
     assert len(ref) == len(got) == 5
     for r, g in zip(ref, got):
         np.testing.assert_allclose(r, g, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("over", [
+    {"score_mode": "standard"},
+    {"score_mode": "standard", "cache_quant": "int8"},
+    {"score_mode": "wqk"},
+    {"score_mode": "wqk", "cache_mode": "x"},
+    {"score_mode": "wqk_int8", "cache_quant": "int8"},
+], ids=["kv", "kv-int8", "xv", "x", "x-int8"])
+def test_stream_matches_gather_all_layouts(over):
+    """Block-streamed decode == dense gather-view oracle on greedy
+    outputs, at ragged per-slot lengths, for every cache layout
+    (kv / xv / x, float and int8)."""
+    model, params = _mk_model(**over)
+    outs = {}
+    for sched in ("stream", "gather"):
+        eng = Engine(model, params, max_slots=2, max_len=64, paged=True,
+                     block_size=8, prefill_chunk=16,
+                     decode_schedule=sched)
+        assert eng.decode_schedule == sched
+        rr = _reqs(5)
+        eng.run(rr)
+        assert all(r.done for r in rr)
+        outs[sched] = [r.output for r in rr]
+    assert outs["stream"] == outs["gather"]
+
+
+def test_streamed_eos_at_block_boundary(setup):
+    """EOS landing exactly on a block boundary under the streamed
+    schedule terminates identically to gather and frees every block."""
+    model, params = setup
+    BS, C = 4, 8
+    prompt = [1] + list(range(7, 14))
+    runs = {}
+    for sched in ("stream", "gather"):
+        probe = Request(rid=0, tokens=list(prompt), max_new_tokens=6,
+                        eos_id=None)
+        eng = Engine(model, params, max_slots=2, max_len=32, paged=True,
+                     block_size=BS, prefill_chunk=C,
+                     decode_schedule=sched)
+        eng.run([probe])
+        runs[sched] = probe.output
+    assert runs["stream"] == runs["gather"]
+    i_boundary = (BS - len(prompt) % BS) % BS or BS
+    eos_tok = runs["stream"][i_boundary]
+    eng = Engine(model, params, max_slots=2, max_len=32, paged=True,
+                 block_size=BS, prefill_chunk=C, decode_schedule="stream")
+    req = Request(rid=1, tokens=list(prompt), max_new_tokens=6,
+                  eos_id=eos_tok)
+    eng.run([req])
+    assert req.done and req.finish_reason == "eos"
+    assert req.output == runs["stream"][:i_boundary + 1]
+    assert (len(prompt) + i_boundary) % BS == 0
+    assert eng.allocator.num_free == eng.allocator.num_usable
+
+
+def test_stream_schedule_rejected_without_backend_support():
+    """Forcing 'stream' on a backend without block-stream support fails
+    loudly at engine construction instead of silently gathering."""
+    model, params = _mk_model(score_mode="factored")
+    with pytest.raises(ValueError, match="block stream"):
+        Engine(model, params, max_slots=2, max_len=32, paged=True,
+               block_size=8, decode_schedule="stream")
+    eng = Engine(model, params, max_slots=2, max_len=32, paged=True,
+                 block_size=8)                       # auto degrades
+    assert eng.decode_schedule == "gather"
+
+
+# ----------------------------------------------------------------- sampling
+
+def test_temperature_zero_is_greedy_and_seed_independent(setup):
+    model, params = setup
+
+    def run(seed):
+        eng = Engine(model, params, max_slots=2, max_len=64, paged=True,
+                     block_size=8, prefill_chunk=16, rng_seed=seed)
+        rr = _reqs(3)
+        eng.run(rr)
+        return [r.output for r in rr]
+
+    assert run(0) == run(1)
+
+
+def test_temperature_sampling_deterministic_under_seed(setup):
+    """temp>0: categorical sampling — deterministic given the engine
+    seed, different across seeds, different from greedy; temp-0 rows in
+    a mixed batch keep their greedy outputs."""
+    model, params = setup
+
+    def run(temp, seed):
+        eng = Engine(model, params, max_slots=3, max_len=64, paged=True,
+                     block_size=8, prefill_chunk=16, rng_seed=seed)
+        rr = [Request(rid=i, tokens=[1, 5 + i, 9], max_new_tokens=8,
+                      eos_id=None, temperature=temp) for i in range(3)]
+        eng.run(rr)
+        return [r.output for r in rr]
+
+    hot_a, hot_b = run(1.0, 0), run(1.0, 0)
+    assert hot_a == hot_b                       # seeded => reproducible
+    assert run(1.0, 1) != hot_a                 # seed actually matters
+    greedy = run(0.0, 0)
+    assert hot_a != greedy                      # temperature matters
+
+    # mixed batch: the greedy slot must be unaffected by hot neighbors
+    eng = Engine(model, params, max_slots=2, max_len=64, paged=True,
+                 block_size=8, prefill_chunk=16, rng_seed=0)
+    rr = [Request(rid=0, tokens=[1, 5, 9], max_new_tokens=8, eos_id=None,
+                  temperature=0.0),
+          Request(rid=1, tokens=[1, 6, 9], max_new_tokens=8, eos_id=None,
+                  temperature=1.5)]
+    eng.run(rr)
+    assert rr[0].output == greedy[0]
+
+
+# ------------------------------------------------------------ finish reason
+
+def test_finish_reasons(setup):
+    """eos / length / truncated are distinguishable on completion."""
+    model, params = setup
+    # length: runs out of max_new_tokens
+    eng = Engine(model, params, max_slots=2, max_len=64, paged=True,
+                 block_size=8, prefill_chunk=16)
+    r_len = Request(rid=0, tokens=[1, 5, 9], max_new_tokens=4, eos_id=None)
+    eng.run([r_len])
+    assert r_len.finish_reason == "length"
+    # eos: replay with eos_id set to an observed token
+    r_eos = Request(rid=1, tokens=[1, 5, 9], max_new_tokens=4,
+                    eos_id=r_len.output[1])
+    Engine(model, params, max_slots=2, max_len=64, paged=True,
+           block_size=8, prefill_chunk=16).run([r_eos])
+    assert r_eos.finish_reason == "eos"
+    assert r_eos.output == r_len.output[:2]
+    # truncated: hits the max_len-1 context wall with budget left
+    eng3 = Engine(model, params, max_slots=1, max_len=16, paged=True,
+                  block_size=8, prefill_chunk=8)
+    r_tr = Request(rid=2, tokens=list(range(1, 11)), max_new_tokens=100,
+                   eos_id=None)
+    eng3.run([r_tr])
+    assert r_tr.done and r_tr.finish_reason == "truncated"
+    assert len(r_tr.output) < 100
+    # an admission-completed request gets a reason too
+    r_one = Request(rid=3, tokens=[1, 5, 9], max_new_tokens=1, eos_id=None)
+    Engine(model, params, max_slots=2, max_len=64, paged=True,
+           block_size=8, prefill_chunk=16).run([r_one])
+    assert r_one.finish_reason == "length" and len(r_one.output) == 1
 
 
 # ---------------------------------------------------------------- lifecycle

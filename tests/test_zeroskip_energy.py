@@ -42,6 +42,36 @@ def test_zero_skip_counts_exact_small():
     assert float(st_.skip_fraction) > 0.98
 
 
+def test_zero_skip_counts_are_integer_exact(rng):
+    """fired/total are EXACT integer counts (int32 per-row accumulation,
+    host-side integer product) — the old float32 accumulation silently
+    dropped events past 2^24. Verified against an int64 numpy popcount
+    on a workload whose fired count (~5e9) far exceeds f32's exact
+    integer range."""
+    x = rng.integers(-128, 128, (256, 64)).astype(np.int8)
+    st_ = zeroskip.skip_stats(jnp.asarray(x), jnp.asarray(x))
+    u = np.where(x < 0, x.astype(np.int64) + 256, x.astype(np.int64))
+    pop = np.zeros(x.shape[0], np.int64)
+    for k in range(8):
+        pop += ((u >> k) & 1).sum(axis=1)
+    exact = int(pop.sum()) ** 2                    # xa == xb
+    assert exact > 2 ** 31          # far past f32's 2^24 exact integers
+    assert float(st_.fired_events) == float(exact)
+    assert float(st_.total_events) == 256.0 * 256 * 64 * 64 * 8 * 8
+
+
+def test_zero_skip_rejects_int32_overflow_workloads():
+    """The int32 accumulation bound (N*D*bits < 2^31) is asserted up
+    front instead of silently wrapping."""
+    big = jnp.zeros((1, 1), jnp.int8)
+
+    class _Fake:                      # shape-only stand-in: the bound
+        shape = (2 ** 28, 1024)       # check runs before any compute
+
+    with pytest.raises(ValueError, match="int32"):
+        zeroskip.skip_stats(_Fake(), big)
+
+
 def test_zero_skip_padding_reaches_paper_claim(rng):
     """Sparse padded inputs (the paper's Transformer regime) skip >= 55%."""
     x = rng.integers(-128, 128, (64, 64))
