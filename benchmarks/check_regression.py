@@ -33,6 +33,13 @@ cross-machine absolute speeds legitimately differ severalfold, so only
 order-of-magnitude reference regressions are actionable from CI).
 ``--absolute`` compares raw seconds for every row instead (same-machine
 trend runs, where tight absolute checks are meaningful).
+
+A third kind of gate needs no baseline at all: **floors** — absolute
+bounds on simulated/derived metrics that pin paper claims regardless
+of machine speed. ``BENCH_sim.json``'s ``sim`` section is gated this
+way: the reference ViT workload must keep >=55% zero-skip and a macro
+TOPS/W within 10% of the paper's 34.1, and the skip-off simulation
+must stay exactly equal to the analytic model.
 """
 from __future__ import annotations
 
@@ -45,6 +52,39 @@ SECTIONS = {
     "backends": ("standard", "seconds_per_call"),
     "decode_tick": ("gather", "seconds_per_tick"),
 }
+
+# Baseline-free absolute gates: section -> [(row, metric, op, bound)].
+# op: ">=" / "<=" numeric bounds, "==" exact match (bools). 34.09 is the
+# spec TOPS/W (energy.PAPER_MACRO.tops_per_w; paper rounds to 34.1).
+FLOORS = {
+    "sim": [
+        ("vit_reference", "skip_fraction", ">=", 0.55),
+        ("vit_reference", "tops_per_w", ">=", 34.09 * 0.90),
+        ("vit_reference", "tops_per_w", "<=", 34.09 * 1.10),
+        ("vit_reference_noskip", "analytic_exact", "==", True),
+        ("trace_replay", "events", ">=", 1),
+    ],
+}
+
+
+def check_floors(section_name: str, current: dict) -> list:
+    """Absolute-bound gate (no baseline): every (row, metric, op,
+    bound) in FLOORS[section] must hold in the current file."""
+    failures = []
+    for row, metric, op, bound in FLOORS[section_name]:
+        if row not in current or metric not in current.get(row, {}):
+            failures.append(f"{row}.{metric}: missing from current "
+                            f"{section_name} section")
+            continue
+        v = current[row][metric]
+        ok = {">=": lambda: v >= bound, "<=": lambda: v <= bound,
+              "==": lambda: v == bound}[op]()
+        print(f"  [{'ok' if ok else 'FAIL':4s}] {row}.{metric:18s} "
+              f"{v!r:>22} (required {op} {bound!r})")
+        if not ok:
+            failures.append(f"{row}.{metric}: {v!r} violates "
+                            f"{op} {bound!r}")
+    return failures
 
 
 def _load(path: str) -> dict:
@@ -132,11 +172,15 @@ def main(argv=None) -> int:
 
     baseline, current = _load(args.baseline), _load(args.current)
     sections = [s for s in SECTIONS if s in current]
-    if not sections:
+    floor_sections = [s for s in FLOORS if s in current]
+    if not sections and not floor_sections:
         print(f"no gate-able sections in {args.current} "
-              f"(known: {sorted(SECTIONS)})")
+              f"(known: {sorted(SECTIONS)} + floors {sorted(FLOORS)})")
         return 1
     failures = []
+    for sec in floor_sections:
+        print(f"bench-floor gate [{sec}] (absolute bounds, no baseline):")
+        failures += check_floors(sec, current[sec])
     for sec in sections:
         reference, metric = SECTIONS[sec]
         mode = "absolute" if args.absolute else f"normalized to {reference!r}"

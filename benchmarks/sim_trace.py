@@ -1,0 +1,156 @@
+"""Cycle-level simulator benchmark: synthetic reference workloads + a
+captured serving-engine trace, replayed through repro.sim.
+
+    PYTHONPATH=src python -m benchmarks.sim_trace [--json PATH]
+
+Writes ``BENCH_sim.json`` with a ``sim`` section:
+
+  vit_reference        : the paper's ViT evaluation point (N=197, D=64,
+                         padded tail) with hierarchical zero-skip — the
+                         >=55% skip and 34.1 TOPS/W claims, measured.
+  vit_reference_noskip : the same workload with skipping disabled —
+                         must equal the analytic endpoint
+                         (energy.macro_energy_j / macro_latency_s)
+                         EXACTLY (``analytic_exact``).
+  detr                 : the paper's segmentation-style workload.
+  trace_replay         : a real serving run (reduced qwen2.5-14b,
+                         wqk_int8 W8A8 scores, paged + chunked prefill)
+                         captured with Engine(capture_trace=True) and
+                         replayed end-to-end — skip rates, buffer
+                         traffic and utilization *measured* on the
+                         engine's actual score schedule.
+
+``benchmarks/check_regression.py`` gates the section's floors (the
+skip fraction >=0.55 and TOPS/W within 10% of 34.1 on vit_reference,
+plus the exact analytic equality) so the paper claims stay pinned.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core import energy
+from repro.sim import MacroSim, synthetic_workload
+
+PAPER_TOPS_PER_W = energy.PAPER_MACRO.tops_per_w        # 34.09
+
+
+def _row(rep, extra=None) -> dict:
+    d = rep.to_dict()
+    d.update(extra or {})
+    return d
+
+
+def bench_synthetic(name: str) -> dict:
+    wl = synthetic_workload(name)
+    rep = MacroSim().simulate(wl)
+    return _row(rep, {"n": wl.n_q, "d": wl.d})
+
+
+def bench_vit_noskip() -> dict:
+    wl = synthetic_workload("vit")
+    rep = MacroSim(zero_skip=False).simulate(wl)
+    ops = energy.score_ops(wl.n_q, wl.d)
+    exact = (rep.macro_energy_j == energy.macro_energy_j(ops)
+             and rep.latency_s == energy.macro_latency_s(ops))
+    return _row(rep, {"n": wl.n_q, "d": wl.d,
+                      "analytic_exact": bool(exact)})
+
+
+def bench_trace_replay() -> dict:
+    """Capture a real (reduced) serving run and replay it."""
+    import jax
+    from repro.configs.base import get_arch, reduced
+    from repro.models.model import build_model
+    from repro.serving.engine import Engine, Request
+
+    cfg = reduced(get_arch("qwen2.5-14b"), num_layers=2,
+                  score_mode="wqk_int8")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, max_slots=4, max_len=64, block_size=8,
+                 prefill_chunk=16, capture_trace=True)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, tokens=[1] + rng.integers(3, 500, 5 + 3 * i)
+                    .tolist(), max_new_tokens=8, eos_id=None)
+            for i in range(6)]
+    eng.run(reqs)
+    trace = eng.trace.trace
+    rep = MacroSim().simulate(trace.workloads())
+    resident = MacroSim(weights_resident=True).simulate(trace.workloads())
+    return _row(rep, {
+        "events_captured": len(trace.events),
+        "arch": trace.meta.arch, "d": trace.meta.d,
+        "heads": trace.meta.heads, "layers": trace.meta.layers,
+        "decode_schedule": trace.meta.decode_schedule,
+        "system_tops_per_w_weights_resident": resident.system_tops_per_w,
+    })
+
+
+def sweep() -> dict:
+    return {"workload": {"paper_tops_per_w": PAPER_TOPS_PER_W,
+                         "macro": "64x64x8b @65nm"},
+            "sim": {"vit_reference": bench_synthetic("vit"),
+                    "vit_reference_noskip": bench_vit_noskip(),
+                    "detr": bench_synthetic("detr"),
+                    "trace_replay": bench_trace_replay()}}
+
+
+def run(report):
+    report.section("Cycle-level CIM macro simulator (repro.sim)")
+    out = sweep()
+    s = out["sim"]
+    for name in ("vit_reference", "vit_reference_noskip", "detr",
+                 "trace_replay"):
+        r = s[name]
+        report.row(f"{name:22s} skip={r['skip_fraction']*100:5.1f}%  "
+                   f"{r['tops_per_w']:6.2f} TOPS/W  "
+                   f"util={r['utilization']*100:5.1f}%  "
+                   f"{r['latency_s']*1e6:9.2f} us  "
+                   f"{r['macro_energy_j']*1e9:8.2f} nJ")
+    with open("BENCH_sim.json", "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    report.row("wrote BENCH_sim.json")
+    v = s["vit_reference"]
+    report.check(">=55% skip on the reference ViT workload",
+                 v["skip_fraction"] >= 0.55)
+    report.check("TOPS/W within 10% of the paper's 34.1",
+                 abs(v["tops_per_w"] - PAPER_TOPS_PER_W)
+                 <= 0.10 * PAPER_TOPS_PER_W)
+    report.check("skip-off simulation == analytic model exactly",
+                 s["vit_reference_noskip"]["analytic_exact"])
+    report.check("serving trace captured and replayed",
+                 s["trace_replay"]["events_captured"] > 0
+                 and s["trace_replay"]["events"]
+                 == s["trace_replay"]["events_captured"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_sim.json")
+    args = ap.parse_args()
+    out = sweep()
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    s = out["sim"]
+    ok = True
+    for name, r in s.items():
+        print(f"{name:22s} skip {r['skip_fraction']*100:5.1f}% | "
+              f"{r['tops_per_w']:6.2f} TOPS/W | util "
+              f"{r['utilization']*100:5.1f}% | {r['latency_s']*1e6:9.2f} us")
+    v = s["vit_reference"]
+    ok &= v["skip_fraction"] >= 0.55
+    ok &= abs(v["tops_per_w"] - PAPER_TOPS_PER_W) <= 0.10 * PAPER_TOPS_PER_W
+    ok &= bool(s["vit_reference_noskip"]["analytic_exact"])
+    ok &= s["trace_replay"]["events_captured"] > 0
+    print(f"wrote {args.json}")
+    if not ok:
+        raise SystemExit("sim acceptance checks FAILED")
+
+
+if __name__ == "__main__":
+    main()

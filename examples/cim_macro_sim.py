@@ -1,29 +1,34 @@
-"""CIM macro behavioural simulation — the paper's §IV methodology,
-end-to-end on the 64x64x8b macro geometry:
+"""CIM macro simulation — the paper's §IV methodology end-to-end on
+the 64x64x8b macro geometry, through the repro.sim subsystem:
 
-  1. a 64-dim attention-score workload is quantized to W8A8,
+  1. the reference ViT-style workload (197 tokens x 64 dims, padded
+     tail) is quantized to W8A8,
   2. the Pallas bitplane kernel executes the EXACT 4-group bit-serial
-     schedule (Eq. 10) in interpret mode (our 'behavioural Verilog'),
-  3. op counts x the post-layout per-op energy give energy/latency,
-  4. zero-skip is applied from the measured bit statistics.
+     schedule (Eq. 10) in interpret mode (our 'behavioural Verilog')
+     and is asserted bit-exact against the int32 oracle,
+  3. the cycle-level simulator (repro.sim.MacroSim) replays the same
+     workload: tiling, hierarchical zero-skip, buffer traffic — and is
+     cross-checked against the analytic model (with skipping disabled
+     the two are EQUAL, not close),
+  4. the Fig. 7 memory comparison comes out of the same run.
 
     PYTHONPATH=src python examples/cim_macro_sim.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitserial, energy, quant, zeroskip
+from repro.core import bitserial, energy, quant
 from repro.kernels.bitplane_mac import ops as bitplane_ops
+from repro.sim import MacroSim, reference_vit_operands, workload_from_arrays
 
-rng = np.random.default_rng(42)
 N, D = 197, 64                       # ViT tokens on the 64x64 macro
 spec = energy.PAPER_MACRO
 
-# workload: raw inputs + folded W_QK, quantized W8A8
-x = rng.standard_normal((N, D)).astype(np.float32)
-x[160:] = 0.0                        # padded tokens (the zero-skip food)
+# the repo-wide reference workload: raw X + folded W_QK, quantized W8A8
+x, qx_np = reference_vit_operands(n=N, d=D)
+rng = np.random.default_rng(42)
 wqk = (rng.standard_normal((D, D)) * 0.1).astype(np.float32)
-qx, sx = quant.quantize(jnp.asarray(x), axis=-1)
+qx = jnp.asarray(qx_np)
 qw, sw = quant.quantize_per_tensor(jnp.asarray(wqk))
 
 # bit-exact macro execution (Pallas kernel, interpret=True on CPU)
@@ -32,18 +37,38 @@ s_oracle = bitserial.exact_scores(qx, qx, qw)
 assert bool(jnp.all(s_macro == s_oracle)), "bit-exactness violated!"
 print(f"macro scores ({N}x{N}) bit-exact vs int32 oracle: True")
 
-# energy/latency from op counts (the paper's §IV.A methodology)
-ops = energy.score_ops(N, D)
-st = zeroskip.skip_stats(qx, qx)
-skip = float(st.skip_fraction)
-for label, sk in [("no skip", 0.0), (f"zero-skip ({skip*100:.0f}%)", skip)]:
-    e = energy.macro_energy_j(ops, spec, sk)
-    t = energy.macro_latency_s(ops, spec, sk)
-    print(f"  {label:22s} energy {e*1e9:8.2f} nJ   latency {t*1e6:8.2f} us")
-print(f"zero-skip saving: {skip*100:.1f}%  (paper claims >=55% on "
-      f"practical workloads)")
+# cycle-level simulation of the same workload (repro.sim)
+wl = workload_from_arrays(qx_np)
+rep = MacroSim().simulate(wl)                      # §III.C skip on
+rep_dense = MacroSim(zero_skip=False).simulate(wl)  # analytic regime
+print()
+print(rep.summary("cycle-level simulation (hierarchical zero-skip)"))
 
-# where the fold wins: memory accesses vs the two-array baseline
-acc_ratio, e_ratio = energy.fig7_model(n=N, d=D, skip_fraction=skip)
-print(f"vs parallel-CIM baseline: {acc_ratio:.1f}x fewer accesses, "
+# the simulator<->analytic equivalence, stated with == (DESIGN.md §9)
+ops = energy.score_ops(N, D)
+assert rep_dense.macro_energy_j == energy.macro_energy_j(ops)
+assert rep_dense.latency_s == energy.macro_latency_s(ops)
+print(f"\nskip off == analytic model exactly: "
+      f"{rep_dense.macro_energy_j*1e9:.2f} nJ, "
+      f"{rep_dense.latency_s*1e6:.2f} us "
+      f"(energy.macro_energy_j / macro_latency_s)")
+print(f"zero-skip saving: {rep.skip_fraction*100:.1f}% of word-line "
+      f"events ({rep.skip_fraction_rows*100:.1f}% whole rows + "
+      f"{(rep.skip_fraction - rep.skip_fraction_rows)*100:.1f}% "
+      f"bit-pairs; paper claims >=55% on practical workloads)")
+
+# where the fold wins: memory accesses vs the two-array baseline —
+# the simulator's measured traffic against the Fig. 7 analytic bars
+acc_ratio, e_ratio = energy.fig7_model(n=N, d=D,
+                                       skip_fraction=rep.skip_fraction)
+assert rep.x_words == energy.accesses_wqk_cim(N, D)
+print(f"global-buffer traffic: {rep.x_words:,} X words "
+      f"(== Fig. 7 model), {rep.baseline_x_words:,} for the baseline "
+      f"-> {rep.baseline_x_words/rep.x_words:.1f}x fewer accesses, "
       f"{e_ratio:.1f}x less energy (paper: 6.9x / 4.9x)")
+
+# scale-out: 4 macros sharding the query rows
+rep4 = MacroSim(n_macros=4).simulate(wl)
+print(f"4-macro scale-out: {rep.latency_s/rep4.latency_s:.2f}x faster "
+      f"({rep4.latency_s*1e6:.2f} us) at "
+      f"{rep4.utilization*100:.1f}% of 4-macro peak")

@@ -14,6 +14,7 @@ A systolic MXU cannot skip data-dependently, so on TPU this lives as:
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -24,9 +25,10 @@ from repro.core.bitserial import to_bitplanes
 
 # One-bit counts accumulate in int32 on device; the total over an
 # operand is bounded by N * D * bits, so the sum is exact iff that
-# product stays below 2^31. Asserted in skip_stats (any bigger workload
-# should be chunked by the caller and the per-chunk counts combined as
-# Python ints, which this module does for the final product anyway).
+# product stays below 2^31. Asserted in skip_stats; bigger workloads
+# (real serving traces easily reach N * D * bits >= 2^31) go through
+# skip_stats_chunked, which slices rows under the bound and combines
+# the exact per-chunk counts as Python ints.
 _INT32_EVENT_BOUND = 2 ** 31
 
 
@@ -47,6 +49,18 @@ class SkipStats(NamedTuple):
         return 1.0 - self.fired_events / max(self.total_events, 1)
 
 
+@partial(jax.jit, static_argnames=("bits",))
+def _ones_kernel(x: jax.Array, bits: int) -> jax.Array:
+    planes = to_bitplanes(x, bits)                    # (N, D, K) uint8
+    return jnp.sum(planes, dtype=jnp.int32)
+
+
+def _ones_sum(x: jax.Array, bits: int) -> int:
+    """Exact total 1-bit count of one operand (N, D) as a Python int.
+    Caller guarantees N * D * bits < 2^31 (int32 accumulation bound)."""
+    return int(_ones_kernel(jnp.asarray(x), bits))
+
+
 def skip_stats(xa: jax.Array, xb: jax.Array, bits: int = 8) -> SkipStats:
     """Exact count of fired word-line events for scores over (xa, xb).
 
@@ -56,7 +70,8 @@ def skip_stats(xa: jax.Array, xb: jax.Array, bits: int = 8) -> SkipStats:
     summed over (i,j) pairs — computed exactly without materializing the
     6-D event tensor.
 
-    xa (Na, D) int8, xb (Nb, D) int8.
+    xa (Na, D) int8, xb (Nb, D) int8. Workloads past the int32 event
+    bound (N * D * bits >= 2^31) must go through skip_stats_chunked.
     """
     Na, D = xa.shape[-2], xa.shape[-1]
     Nb = xb.shape[-2]
@@ -64,14 +79,51 @@ def skip_stats(xa: jax.Array, xb: jax.Array, bits: int = 8) -> SkipStats:
         if n * D * bits >= _INT32_EVENT_BOUND:
             raise ValueError(
                 f"{name}: {n} x {D} x {bits} one-bit events can exceed "
-                f"int32 — chunk the input and combine per-chunk counts")
-    pa = to_bitplanes(xa, bits)                       # (Na, D, K) uint8
-    pb = to_bitplanes(xb, bits)
-    ones_a = jnp.sum(pa.astype(jnp.int32), axis=(-1, -2))  # per-row count
-    ones_b = jnp.sum(pb.astype(jnp.int32), axis=(-1, -2))
-    sa = int(jnp.sum(ones_a))                         # exact (bound above)
-    sb = int(jnp.sum(ones_b))
+                f"int32 — use skip_stats_chunked, which combines exact "
+                f"per-chunk counts as Python ints")
+    sa = _ones_sum(xa, bits)
+    sb = _ones_sum(xb, bits)
     return SkipStats(Na * Nb * D * D * bits * bits,   # exact Python ints
+                     sa * sb,
+                     np.float64(sa) / (Na * D * bits),
+                     np.float64(sb) / (Nb * D * bits))
+
+
+def skip_stats_chunked(xa: jax.Array, xb: jax.Array, bits: int = 8,
+                       chunk: int = 4096) -> SkipStats:
+    """skip_stats for workloads of ANY size: rows are processed in
+    chunks that individually respect the int32 accumulation bound and
+    the exact per-chunk 1-bit counts combine as Python ints (the
+    factorized fired count only needs each operand's total — sums over
+    row chunks are associative with no rounding at any size).
+
+    ``chunk`` rows per slice; it is clamped down automatically if
+    ``chunk * D * bits`` itself would exceed the bound. Bit-identical
+    to skip_stats wherever both are defined.
+
+    This is the jnp-side API for exact counts at any size; the macro
+    simulator's trace capture keeps its own host-side tally at finer
+    granularity (``repro.sim.skip.operand_stats`` — per-row/per-plane,
+    int64 numpy). tests/test_sim.py pins the two implementations to
+    identical fired/total counts so they cannot drift apart.
+    """
+    D = xa.shape[-1]
+    if xb.shape[-1] != D:
+        raise ValueError(f"operand widths differ: {D} vs {xb.shape[-1]}")
+    max_rows = (_INT32_EVENT_BOUND - 1) // max(D * bits, 1)
+    if max_rows < 1:
+        raise ValueError(f"one row of {D} x {bits} bits already exceeds "
+                         f"the int32 event bound")
+    chunk = max(1, min(chunk, max_rows))
+
+    def total_ones(x) -> int:
+        return sum(_ones_sum(x[r:r + chunk], bits)
+                   for r in range(0, x.shape[-2], chunk))
+
+    Na, Nb = xa.shape[-2], xb.shape[-2]
+    sa = total_ones(xa)
+    sb = sa if xb is xa else total_ones(xb)
+    return SkipStats(Na * Nb * D * D * bits * bits,
                      sa * sb,
                      np.float64(sa) / (Na * D * bits),
                      np.float64(sb) / (Nb * D * bits))

@@ -73,6 +73,12 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for all requests "
                          "(0 = greedy; >0 = categorical, seeded)")
+    ap.add_argument("--sim-trace", default=None, metavar="PATH",
+                    help="capture the quantized score-path workload "
+                         "(shapes + bit sparsity per prefill chunk / "
+                         "decode tick) and write it to PATH for replay "
+                         "through the CIM macro simulator: "
+                         "python -m repro.launch.simulate --trace PATH")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -98,7 +104,8 @@ def main():
                  block_size=args.block_size, hbm_bytes=hbm,
                  prefill_chunk=args.prefill_chunk,
                  prefix_sharing=not args.no_prefix_sharing,
-                 decode_schedule=args.decode_schedule)
+                 decode_schedule=args.decode_schedule,
+                 capture_trace=args.sim_trace is not None)
     if eng.plan is not None:
         budget = kvcache.budget_for(cfg)
         print(f"[serve] score backend {eng.plan.backend.name!r} "
@@ -141,6 +148,11 @@ def main():
           f"{dt:.1f}s ({tok/dt:.1f} tok/s); finish reasons: "
           + ", ".join(f"{k}={v}" for k, v in sorted(reasons.items(),
                                                     key=lambda kv: str(kv[0]))))
+    if args.sim_trace:
+        eng.trace.save(args.sim_trace)
+        print(f"[serve] wrote {len(eng.trace.trace.events)} score-trace "
+              f"events to {args.sim_trace}; replay with: python -m "
+              f"repro.launch.simulate --trace {args.sim_trace}")
 
 
 if __name__ == "__main__":

@@ -39,6 +39,13 @@ deterministic given the seed either way. Every finished request
 records ``finish_reason``: ``"eos"`` (sampled its eos_id), ``"length"``
 (max_new_tokens reached), or ``"truncated"`` (hit the ``max_len - 1``
 context wall with budget left).
+
+``capture_trace=True`` attaches a ``repro.sim`` score-trace hook: every
+prefill chunk and decode tick records its quantized score-operand
+shapes (logical + schedule-padded) and exact bit-sparsity tallies into
+``engine.trace`` for replay through the cycle-level CIM macro
+simulator (``launch/simulate.py``). The hook is pure host-side integer
+bookkeeping behind an ``if`` — the jitted serving path is untouched.
 """
 from __future__ import annotations
 
@@ -80,7 +87,8 @@ class Engine:
                  hbm_bytes: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  prefix_sharing: bool = True,
-                 decode_schedule: str = "auto"):
+                 decode_schedule: str = "auto",
+                 capture_trace: bool = False):
         self.model, self.params = model, params
         self.max_slots, self.max_len = max_slots, max_len
         cfg = model.cfg
@@ -150,6 +158,18 @@ class Engine:
             self._decode = jax.jit(model.decode_step)
             self._prefills: Dict[int, Callable] = {}
 
+        # score-trace capture for the hardware simulator (repro.sim):
+        # records quantized score-path operand shapes + exact bit
+        # sparsity per prefill chunk / decode tick. None (the default)
+        # keeps the serving loop entirely untouched.
+        self.trace = None
+        if capture_trace:
+            from repro.sim.trace import TraceCapture
+            self.trace = TraceCapture.for_model(
+                model, params, decode_schedule=self.decode_schedule,
+                block_size=self.block_size if self.paged else 0,
+                max_len=max_len)
+
     # ---------------------------------------------------------- admission
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slot_req):
@@ -212,6 +232,10 @@ class Engine:
             # comes from the stub frontend embeddings attached to req
             batch["enc_embeds"] = jnp.asarray(req.enc_embeds)  # type: ignore
         logits, cache1 = self._prefill_fn(b)(self.params, batch)
+        if self.trace is not None:
+            # dense prefill sweeps the full bucketed self-attention
+            self.trace.record("prefill", req.tokens, req.tokens,
+                              n_q_sched=b, n_kv_sched=b)
         self._copy_slot(cache1, slot)
         tok = self._sample(logits, [req.temperature])[0]
         req.output.append(int(tok))
@@ -297,6 +321,13 @@ class Engine:
                 self.params, self.pool, trow, jnp.asarray(buf),
                 jnp.asarray([c0], np.int32),
                 self._blocks_used(np.asarray([c0 + C - 1])))
+            if self.trace is not None:
+                # queries: this chunk; keys: every position the graph
+                # scores it against (the schedule covers the padded
+                # chunk end c0+C-1, exactly what _blocks_used saw)
+                self.trace.record(
+                    "prefill", chunk, req.tokens[:c0 + len(chunk)],
+                    n_q_sched=C, n_kv_sched=self._sched_rows(c0 + C - 1))
             last_c0 = c0
         tok = self._sample(logits[:, plen - 1 - last_c0],
                            [req.temperature])[0]
@@ -318,6 +349,19 @@ class Engine:
             self._tables_dev = None
 
     # -------------------------------------------------------------- tick
+    def _sched_rows(self, last_pos: int) -> int:
+        """KV rows the decode graph actually sweeps for a sequence whose
+        last written position is ``last_pos`` — what the hardware trace
+        records as the scheduled operand height (rows past the logical
+        length are zero: pure zero-skip food for the simulator)."""
+        if not self.paged:
+            return self.max_len                   # dense logical view
+        if self.decode_schedule == "stream":
+            used = min(last_pos // self.block_size + 1,
+                       self.blocks_per_seq)
+            return used * self.block_size         # early-exit bound
+        return self.blocks_per_seq * self.block_size
+
     def _blocks_used(self, last_pos: np.ndarray):
         """Per-slot live block counts covering every position up to
         ``last_pos`` — the streamed schedule's early-exit bound. None on
@@ -347,6 +391,14 @@ class Engine:
         into their own row / the null block; masked on readout)."""
         if all(r is None for r in self.slot_req):
             return
+        if self.trace is not None:
+            for s, req in enumerate(self.slot_req):
+                if req is None:
+                    continue
+                toks_all = req.tokens + req.output   # positions 0..pos
+                self.trace.record(
+                    "decode", toks_all[-1:], toks_all,
+                    n_kv_sched=self._sched_rows(int(self.pos[s])))
         toks = jnp.asarray(self.last_tok)
         pos = jnp.asarray(self.pos)
         if self.paged:

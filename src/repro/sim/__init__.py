@@ -1,0 +1,33 @@
+"""repro.sim — trace-driven, cycle-level simulator of the CIM macro.
+
+The analytic endpoint (core/energy.py) *assumes* op counts, skip
+fractions and buffer behaviour; this subsystem *measures* them by
+replaying real workloads — serving-engine traces (sim/trace.py,
+captured by `serving.Engine(capture_trace=True)`) or synthetic
+ViT/DETR score matrices — through an event-driven model of the
+64x64x8b macro (sim/machine.py). With skipping disabled and 100%
+utilization the simulator reproduces `energy.macro_energy_j` /
+`macro_latency_s` exactly (DESIGN.md §9).
+
+    from repro.sim import MacroSim, workload_from_arrays
+    rep = MacroSim().simulate(workload_from_arrays(qx))
+    print(rep.summary())
+"""
+from repro.sim.buffer import BufferTraffic, GlobalBuffer
+from repro.sim.machine import (MacroSim, ScoreWorkload, dense_workload,
+                               workload_from_arrays)
+from repro.sim.report import SimReport
+from repro.sim.schedule import TileSchedule, schedule_for
+from repro.sim.skip import (OperandStats, SkipCounts, merge_stats,
+                            operand_stats, pair_skip_counts, zero_stats)
+from repro.sim.trace import (Trace, TraceCapture, TraceEvent, TraceMeta,
+                             reference_vit_operands, synthetic_workload)
+
+__all__ = [
+    "BufferTraffic", "GlobalBuffer", "MacroSim", "OperandStats",
+    "ScoreWorkload", "SimReport", "SkipCounts", "TileSchedule", "Trace",
+    "TraceCapture", "TraceEvent", "TraceMeta", "dense_workload",
+    "merge_stats", "operand_stats", "pair_skip_counts",
+    "reference_vit_operands", "schedule_for", "synthetic_workload",
+    "workload_from_arrays", "zero_stats",
+]

@@ -1,0 +1,74 @@
+"""Global-buffer traffic and stall model (paper Fig. 7 dataflow).
+
+The weight-stationary W_QK dataflow's memory claim is that the raw X
+streams into the input buffer ONCE and is reused for the X^T pass — no
+dynamic Q/K write-back, no transpose buffer. Capacity misses re-stream
+a calibrated fraction of an X pass: this module deliberately imports
+`energy.BUFFER_MISS` / `energy.EACC_PER_OP` so the simulator's traffic
+is the *same* Fig. 7 model the analytic endpoint uses (one source of
+truth, asserted in tests): for a self-attention event the simulated
+access count equals `energy.accesses_wqk_cim(n, d)` exactly.
+
+On top of the word counts, a bandwidth model: streaming overlaps the
+MAC phase and exposes a stall only when `words / words_per_cycle`
+exceeds the compute cycles it hides behind — with the default 64-wide
+port (one 64x8b input row per cycle) practical workloads never stall.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.core import energy
+
+
+class BufferTraffic(NamedTuple):
+    """8-bit-word global-buffer accesses for one workload event."""
+    x_words: int           # input streaming (incl. capacity re-streams)
+    w_words: int           # weight-tile loads (scale-out replicated)
+    baseline_x_words: int  # the parallel-CIM two-array baseline's X
+    #                        traffic for the same event (Fig. 7 bars)
+
+    @property
+    def words(self) -> int:
+        return self.x_words + self.w_words
+
+    def energy_j(self, spec: energy.MacroSpec) -> float:
+        """Access energy at the calibrated EACC_PER_OP x e_op per word."""
+        return self.words * energy.EACC_PER_OP * spec.energy_per_op_j
+
+
+class GlobalBuffer:
+    """Traffic/bandwidth model of the macro's global buffer port.
+
+    miss_fraction : extra fraction of an X pass re-streamed because the
+                    input buffer cannot hold all N tokens for the X^T
+                    pass (energy.BUFFER_MISS — Fig. 7's calibration).
+    words_per_cycle : port width in 8-bit words (64 = one input row of
+                    the 64-wide array per cycle).
+    """
+
+    def __init__(self, miss_fraction: float = energy.BUFFER_MISS,
+                 words_per_cycle: int = 64):
+        if words_per_cycle <= 0:
+            raise ValueError("words_per_cycle must be positive")
+        self.miss_fraction = miss_fraction
+        self.words_per_cycle = words_per_cycle
+
+    def traffic(self, n_q: int, n_kv: int, d: int, *, shared: bool,
+                weight_words: int) -> BufferTraffic:
+        """Word counts for one score event.
+
+        shared=True: the query rows are among the kv rows (self
+        attention, prefill chunks, decode ticks — the engine's traces),
+        so one X pass covers both operands; shared=False streams the
+        query side separately (cross-attention style)."""
+        kv_pass = int(round(n_kv * d * (1.0 + self.miss_fraction)))
+        x_words = kv_pass if shared else kv_pass + n_q * d
+        base = energy.accesses_baseline_cim(n_kv, d) \
+            + (0 if shared else n_q * d)
+        return BufferTraffic(x_words=x_words, w_words=weight_words,
+                             baseline_x_words=base)
+
+    def stall_cycles(self, x_words: int, compute_cycles: float) -> float:
+        """Streaming cycles not hidden behind the MAC phase."""
+        return max(0.0, x_words / self.words_per_cycle - compute_cycles)

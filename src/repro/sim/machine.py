@@ -1,0 +1,223 @@
+"""The machine: an event-driven, cycle-level model of the CIM macro.
+
+`MacroSim.simulate(workload)` replays a sequence of `ScoreWorkload`
+events (one attention-score computation each — a prefill chunk, a
+decode tick, or a standalone (N, D) scores call) through the macro
+model and returns a `SimReport`.
+
+Per event the machine resolves a `TileSchedule` (sim/schedule.py),
+takes the exact hierarchical-skip counts (sim/skip.py), and advances
+three coupled accounts:
+
+  time    : MAC cycles after cycle-level skipping, op-calibrated to the
+            spec (`spec.peak_gops` at 100 MHz fixes the equivalent ops
+            a fully utilized cycle retires — the same calibration the
+            analytic `energy.macro_latency_s` assumes), plus exposed
+            weight loads (double_buffer=False) and buffer stalls.
+  energy  : fired word-line events x the per-op benchmark (skipping
+            disabled counts every scheduled event, which is exactly the
+            analytic model's assumption — the cross-check in
+            tests/test_sim.py is equality, not tolerance).
+  traffic : global-buffer words for inputs + weight tiles
+            (sim/buffer.py, Fig. 7 calibration).
+
+Scale-out (`n_macros`): query rows shard across replicated-weight
+macros; latency follows the largest shard, energy/events are global.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional, Sequence, Union
+
+from repro.core import energy
+from repro.sim import schedule as sched_mod
+from repro.sim.buffer import GlobalBuffer
+from repro.sim.report import SimReport
+from repro.sim.skip import OperandStats, operand_stats, pair_skip_counts
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreWorkload:
+    """One attention-score computation event.
+
+    stats_q / stats_kv: exact bit tallies of the int8 operands
+    (sim/skip.py). n_*_sched: rows the schedule sweeps (block/bucket
+    padding; 0 = logical). shared: the query rows are among the kv rows
+    (self-attention / decode), so one X stream feeds both sides.
+    """
+    stats_q: OperandStats
+    stats_kv: OperandStats
+    heads: int = 1
+    layers: int = 1
+    n_q_sched: int = 0
+    n_kv_sched: int = 0
+    shared: bool = False
+    kind: str = "scores"              # scores | prefill | decode
+
+    @property
+    def n_q(self) -> int:
+        return self.stats_q.rows
+
+    @property
+    def n_kv(self) -> int:
+        return self.stats_kv.rows
+
+    @property
+    def d(self) -> int:
+        return self.stats_q.d
+
+
+def workload_from_arrays(xa, xb=None, *, heads: int = 1, layers: int = 1,
+                         tile_d: int = 64, bits: int = 8,
+                         kind: str = "scores") -> ScoreWorkload:
+    """Build an event from raw int8 operands. xb=None means scores over
+    (xa, xa) — the shared self-attention stream."""
+    sa = operand_stats(xa, tile_d=tile_d, bits=bits)
+    shared = xb is None
+    sb = sa if shared else operand_stats(xb, tile_d=tile_d, bits=bits)
+    return ScoreWorkload(stats_q=sa, stats_kv=sb, heads=heads,
+                         layers=layers, shared=shared, kind=kind)
+
+
+def dense_workload(n_q: int, n_kv: int, d: int, *, heads: int = 1,
+                   layers: int = 1, tile_d: int = 64,
+                   bits: int = 8) -> ScoreWorkload:
+    """Shape-only event: operands assumed fully dense (every bit 1) —
+    the peak-throughput workload (zero skipping possible)."""
+    td = -(-d // tile_d)
+
+    def full(rows: int) -> OperandStats:
+        return OperandStats(rows=rows, d=d, bits=bits, tile_d=tile_d,
+                            ones=rows * d * bits, nz_rows=rows,
+                            nz_frags=rows * td, nz_planes=rows * td * bits)
+
+    return ScoreWorkload(stats_q=full(n_q), stats_kv=full(n_kv),
+                         heads=heads, layers=layers, shared=False)
+
+
+class MacroSim:
+    """Cycle-level simulator of `n_macros` copies of the paper's macro.
+
+    zero_skip     : model §III.C hierarchical skipping (False = the
+                    analytic model's dense assumption; the equivalence
+                    case).
+    double_buffer : weight tiles load behind the previous tile's MAC
+                    phase (paper's design); False serializes the loads
+                    and exposes them in latency.
+    weights_resident : the W_QK tile set stays in the array across
+                    events (true weight-stationary serving) — weight
+                    traffic/load cycles are paid once instead of per
+                    event. Requires every event to share (d, heads,
+                    layers); the default False reloads per event.
+    """
+
+    def __init__(self, spec: energy.MacroSpec = energy.PAPER_MACRO, *,
+                 n_macros: int = 1, zero_skip: bool = True,
+                 double_buffer: bool = True,
+                 weights_resident: bool = False,
+                 buffer: Optional[GlobalBuffer] = None):
+        if n_macros < 1:
+            raise ValueError("n_macros must be >= 1")
+        self.spec = spec
+        self.n_macros = n_macros
+        self.zero_skip = zero_skip
+        self.double_buffer = double_buffer
+        self.weights_resident = weights_resident
+        self.buffer = buffer or GlobalBuffer()
+
+    # --------------------------------------------------------------- run
+    def simulate(self, workload: Union[ScoreWorkload,
+                                       Iterable[ScoreWorkload]]) -> SimReport:
+        if isinstance(workload, ScoreWorkload):
+            workload = [workload]
+        events: Sequence[ScoreWorkload] = list(workload)
+        if not events:
+            raise ValueError("empty workload")
+        rep = SimReport(spec=self.spec, n_macros=self.n_macros,
+                        zero_skip=self.zero_skip)
+        rep.weight_load_hidden = self.double_buffer
+        peak_ops_s = self.spec.peak_gops * 1e9
+        e_op = self.spec.energy_per_op_j
+        weight_sig = None
+        for ev in events:
+            ts = sched_mod.schedule_for(
+                ev.n_q, ev.n_kv, ev.d, spec=self.spec, heads=ev.heads,
+                layers=ev.layers, n_macros=self.n_macros,
+                n_q_sched=ev.n_q_sched, n_kv_sched=ev.n_kv_sched)
+            cnt = pair_skip_counts(ev.stats_q, ev.stats_kv,
+                                   n_q_sched=ts.n_q_sched,
+                                   n_kv_sched=ts.n_kv_sched)
+            hl = ts.hl
+
+            # ------------------------------------------------- events
+            rep.events += 1
+            rep.ops_logical += ts.ops_logical
+            rep.ops_sched += ts.ops_sched
+            rep.wl_events_total += hl * cnt.events_total
+            rep.wl_events_sched += hl * cnt.events_sched_total
+            rep.wl_events_after_row += hl * cnt.events_after_row
+            rep.wl_events_fired += hl * cnt.events_fired
+            rep.mac_cycles_total += hl * cnt.cycles_total
+            rep.mac_cycles_after_row += hl * cnt.cycles_after_row
+            rep.mac_cycles_issued += hl * cnt.cycles_issued
+
+            # --------------------------------------------------- time
+            # issued cycles, op-calibrated in the LOGICAL domain: a
+            # fully-utilized cycle retires ops at peak_gops; padding
+            # appears as (a) extra issued cycles when skipping is off
+            # (cycles_total sweeps the padded pair loop) and (b) the
+            # (d_pad/d)^2 share of each cycle's cells that hold no real
+            # weight; query rows shard ceil-wise across macros. Every
+            # factor is exactly 1.0 for the analytic-equality case, and
+            # issued <= nq*nkv*TD^2*K^2 bounds utilization by 1.
+            cycles_eff = cnt.cycles_issued if self.zero_skip \
+                else cnt.cycles_total
+            cycles_logical = (ev.n_q * ev.n_kv
+                              * ts.d_tiles * ts.d_tiles * ts.bits * ts.bits)
+            shard = math.ceil(ts.n_q_sched / self.n_macros) / ts.n_q_sched
+            compute_s = ts.ops_logical * (cycles_eff / cycles_logical) \
+                * (ts.d_pad / ts.d) ** 2 * shard / peak_ops_s
+            rep.latency_s += compute_s
+
+            # ------------------------------------------------- energy
+            # a fired word-line event costs a fixed add energy; the
+            # op<->event exchange rate is anchored on the *logical*
+            # workload (ops_logical per events_total), so the fraction
+            # is exactly 1.0 for a dense unpadded event — the analytic
+            # equality case — and padding burns energy only when the
+            # skip logic is off (its events then all count as fired)
+            fired_equiv = cnt.events_fired if self.zero_skip \
+                else cnt.events_sched_total
+            rep.macro_energy_j += ts.ops_logical \
+                * (fired_equiv / max(cnt.events_total, 1)) * e_op
+
+            # --------------------------------------- weights + buffer
+            sig = (ev.d, ev.heads, ev.layers)
+            load_weights = not (self.weights_resident and sig == weight_sig)
+            weight_sig = sig
+            w_words = w_cycles = 0
+            if load_weights:
+                w_cycles = ts.weight_load_cycles(self.spec)
+                w_words = ts.weight_words(self.spec) * self.n_macros
+                rep.weight_load_cycles += w_cycles
+                if not self.double_buffer:
+                    rep.latency_s += w_cycles / self.spec.freq_hz
+            tr = self.buffer.traffic(ev.n_q, ev.n_kv, ev.d,
+                                     shared=ev.shared,
+                                     weight_words=w_words)
+            # every attention layer re-streams its own activations (the
+            # heads of one layer share a single X pass — same operand,
+            # different stationary W_QK); weight words carry H*L already
+            tr = tr._replace(x_words=tr.x_words * ev.layers,
+                             baseline_x_words=tr.baseline_x_words
+                             * ev.layers)
+            rep.x_words += tr.x_words
+            rep.w_words += tr.w_words
+            rep.baseline_x_words += tr.baseline_x_words
+            rep.buffer_energy_j += tr.energy_j(self.spec)
+            stall = self.buffer.stall_cycles(
+                tr.x_words, compute_s * self.spec.freq_hz)
+            rep.stall_s += stall / self.spec.freq_hz
+            rep.latency_s += stall / self.spec.freq_hz
+        return rep

@@ -1,0 +1,187 @@
+"""Simulation report: cycles, utilization, energy, TOPS/W — plus the
+analytic-model cross-check (DESIGN.md §9: with skipping disabled and
+100% utilization the simulator must reproduce `energy.macro_energy_j` /
+`macro_latency_s` exactly; the report carries both sides)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import energy
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Aggregated over every event of the simulated workload. Counts
+    are exact Python ints; derived metrics are floats."""
+    spec: energy.MacroSpec
+    n_macros: int
+    zero_skip: bool
+    events: int = 0                     # workload events replayed
+
+    # op accounting (paper §IV.A convention: 1 op = 1 add or mul)
+    ops_logical: int = 0
+    ops_sched: int = 0
+
+    # word-line events (energy domain)
+    wl_events_total: int = 0            # logical (zeroskip total)
+    wl_events_sched: int = 0            # incl. schedule padding
+    wl_events_after_row: int = 0
+    wl_events_fired: int = 0
+
+    # array cycles (latency domain)
+    mac_cycles_total: int = 0
+    mac_cycles_after_row: int = 0
+    mac_cycles_issued: int = 0
+    weight_load_cycles: int = 0
+    weight_load_hidden: bool = True
+
+    # time / energy
+    latency_s: float = 0.0
+    stall_s: float = 0.0
+    macro_energy_j: float = 0.0
+    buffer_energy_j: float = 0.0
+
+    # buffer traffic
+    x_words: int = 0
+    w_words: int = 0
+    baseline_x_words: int = 0
+
+    # ------------------------------------------------------ skip metrics
+    @property
+    def skip_fraction(self) -> float:
+        """Word-line events removed / scheduled events (the paper's
+        ">=55%" number; equals zeroskip.skip_stats on unpadded
+        workloads). 0.0 when skipping is disabled."""
+        if not self.zero_skip:
+            return 0.0
+        return 1.0 - self.wl_events_fired / max(self.wl_events_sched, 1)
+
+    @property
+    def skip_fraction_rows(self) -> float:
+        """Share removed by L1 (whole all-zero rows) alone."""
+        if not self.zero_skip:
+            return 0.0
+        return 1.0 - self.wl_events_after_row / max(self.wl_events_sched, 1)
+
+    @property
+    def cycle_skip_fraction(self) -> float:
+        if not self.zero_skip:
+            return 0.0
+        return 1.0 - self.mac_cycles_issued / max(self.mac_cycles_total, 1)
+
+    # ---------------------------------------------------------- derived
+    @property
+    def useful_ops(self) -> float:
+        """Op-equivalent of the fired (non-padding) work."""
+        if not self.zero_skip:
+            return float(self.ops_logical)
+        return self.ops_logical * self.wl_events_fired \
+            / max(self.wl_events_total, 1)
+
+    @property
+    def energy_j(self) -> float:
+        return self.macro_energy_j + self.buffer_energy_j
+
+    @property
+    def effective_gops(self) -> float:
+        """Useful algorithmic ops per second of simulated wall clock
+        (== spec.peak_gops at 100% utilization without skipping)."""
+        return self.useful_ops / max(self.latency_s, 1e-30) / 1e9
+
+    @property
+    def tops_per_w(self) -> float:
+        """Macro energy efficiency: useful ops / macro energy (the
+        paper's 34.1 TOPS/W benchmark — buffer excluded, as in §IV)."""
+        return self.useful_ops / max(self.macro_energy_j, 1e-30) / 1e12
+
+    @property
+    def system_tops_per_w(self) -> float:
+        """Including global-buffer access energy (Fig. 7's axis)."""
+        return self.useful_ops / max(self.energy_j, 1e-30) / 1e12
+
+    @property
+    def utilization(self) -> float:
+        """Useful throughput / peak: folds geometry padding, shard
+        imbalance, exposed overheads AND the wasted slots of unfired
+        word lines inside issued cycles."""
+        peak = self.spec.peak_gops * 1e9 * self.n_macros
+        return self.useful_ops / max(self.latency_s, 1e-30) / peak
+
+    @property
+    def equiv_cycles(self) -> float:
+        """Simulated wall clock in macro clock cycles."""
+        return self.latency_s * self.spec.freq_hz
+
+    # ------------------------------------------- analytic cross-check
+    @property
+    def analytic_energy_j(self) -> float:
+        """core/energy endpoint at this workload's measured event-skip
+        fraction — must equal `macro_energy_j` exactly when skipping is
+        off and utilization is 100% (tests/test_sim.py pins this)."""
+        return energy.macro_energy_j(self.ops_logical, self.spec,
+                                     self._analytic_skip())
+
+    @property
+    def analytic_latency_s(self) -> float:
+        return energy.macro_latency_s(self.ops_logical, self.spec,
+                                      self._analytic_skip()) / self.n_macros
+
+    def _analytic_skip(self) -> float:
+        if not self.zero_skip:
+            return 0.0
+        return 1.0 - self.wl_events_fired / max(self.wl_events_total, 1)
+
+    # ---------------------------------------------------------- output
+    def to_dict(self) -> dict:
+        d = {k: getattr(self, k) for k in (
+            "events", "n_macros", "zero_skip", "ops_logical", "ops_sched",
+            "wl_events_total", "wl_events_sched", "wl_events_after_row",
+            "wl_events_fired", "mac_cycles_total", "mac_cycles_after_row",
+            "mac_cycles_issued", "weight_load_cycles", "weight_load_hidden",
+            "latency_s", "stall_s", "macro_energy_j", "buffer_energy_j",
+            "x_words", "w_words", "baseline_x_words",
+            "skip_fraction", "skip_fraction_rows", "cycle_skip_fraction",
+            "effective_gops", "tops_per_w", "system_tops_per_w",
+            "utilization", "equiv_cycles",
+            "analytic_energy_j", "analytic_latency_s")}
+        d["tech_nm"] = self.spec.tech_nm
+        return d
+
+    def summary(self, title: Optional[str] = None) -> str:
+        L = []
+        if title:
+            L.append(f"== {title} ==")
+        L.append(f"macro: {self.spec.rows}x{self.spec.cols}x"
+                 f"{self.spec.weight_bits}b @{self.spec.tech_nm:.0f}nm "
+                 f"x{self.n_macros}  zero-skip "
+                 f"{'on' if self.zero_skip else 'off'}")
+        L.append(f"workload: {self.events} events, "
+                 f"{self.ops_logical:,} ops "
+                 f"(scheduled {self.ops_sched:,})")
+        L.append(f"events: {self.wl_events_sched:,} scheduled -> "
+                 f"{self.wl_events_fired:,} fired  "
+                 f"(skip {self.skip_fraction*100:.1f}% = rows "
+                 f"{self.skip_fraction_rows*100:.1f}% + bit-pairs "
+                 f"{(self.skip_fraction - self.skip_fraction_rows)*100:.1f}%)")
+        L.append(f"cycles: {self.mac_cycles_total:,} MAC -> "
+                 f"{self.mac_cycles_issued:,} issued "
+                 f"({self.cycle_skip_fraction*100:.1f}% skipped); "
+                 f"weight-load {self.weight_load_cycles:,} "
+                 f"({'hidden' if self.weight_load_hidden else 'exposed'}); "
+                 f"wall {self.equiv_cycles:,.0f}")
+        L.append(f"latency {self.latency_s*1e6:10.2f} us "
+                 f"(stall {self.stall_s*1e6:.2f} us)   "
+                 f"util {self.utilization*100:5.1f}%   "
+                 f"effective {self.effective_gops:.2f} GOPS")
+        L.append(f"energy  {self.macro_energy_j*1e9:10.2f} nJ macro + "
+                 f"{self.buffer_energy_j*1e9:.2f} nJ buffer "
+                 f"({self.x_words:,} X + {self.w_words:,} W words; "
+                 f"baseline X {self.baseline_x_words:,})")
+        L.append(f"efficiency {self.tops_per_w:6.2f} TOPS/W macro, "
+                 f"{self.system_tops_per_w:.2f} TOPS/W with buffer "
+                 f"(paper: {self.spec.tops_per_w:.1f})")
+        L.append(f"analytic model @ measured skip: "
+                 f"{self.analytic_energy_j*1e9:.2f} nJ, "
+                 f"{self.analytic_latency_s*1e6:.2f} us")
+        return "\n".join(L)

@@ -1,0 +1,131 @@
+"""Tiling an (Nq, Nkv, D) score workload onto the macro geometry.
+
+The 64x64x8b array holds one D-tile pair of the (per-head) folded W_QK.
+A workload with D > 64 sweeps TD^2 weight tiles (TD = ceil(D/64)); each
+score accumulates partial sums across all tile pairs. The (i, j) input
+pair loop is temporal; Nq rows shard across macros for scale-out (each
+macro replicates the weight tiles and owns a contiguous query slice).
+
+Phases modeled per weight tile:
+  weight-load      : `rows` cycles (one word line written per cycle),
+                     double-buffered against the previous tile's MAC
+                     phase (and, for the first tile, against the input
+                     broadcast fill) — exposed only with
+                     double_buffer=False.
+  input broadcast  : global-buffer streaming, overlapped with compute;
+                     modeled in sim/buffer.py (exposes a stall only
+                     when bandwidth-bound).
+  bit-serial MAC   : Nq_sched x Nkv_sched x K^2 bit-plane-pair cycles
+                     per tile pair (sim/skip.py says which issue).
+  shift-accumulate : pipelined with the MAC phase (absorbed; the
+                     paper's adder/shifter follows the array in the
+                     same cycle).
+
+Op accounting keeps the paper's §IV.A convention (1 op = 1 add or mul
+of the algorithmic score computation): the *scheduled* op count scales
+the logical count by the padding the tiling introduces, so
+`ops_logical / ops_sched` is the geometry utilization and a fully
+utilized, skip-free run retires ops at exactly `spec.peak_gops`.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+from repro.core.energy import MacroSpec
+
+
+class TileSchedule(NamedTuple):
+    """Resolved tiling of one score workload event onto the macro(s)."""
+    n_q: int
+    n_kv: int
+    d: int
+    n_q_sched: int       # schedule-swept query rows (>= n_q)
+    n_kv_sched: int      # schedule-swept kv rows (>= n_kv)
+    d_pad: int           # TD * spec.rows
+    d_tiles: int         # TD
+    heads: int
+    layers: int
+    n_macros: int
+    bits: int
+
+    # ------------------------------------------------------------- ops
+    @property
+    def hl(self) -> int:
+        return self.heads * self.layers
+
+    @property
+    def ops_logical(self) -> int:
+        """Paper op count (energy.score_ops generalized to Nq != Nkv):
+        G = Xq W_QK (Nq D^2 macs) + S = G Xkv^T (Nq Nkv D macs)."""
+        return self.hl * 2 * (self.n_q * self.d * self.d
+                              + self.n_q * self.n_kv * self.d)
+
+    @property
+    def ops_sched(self) -> int:
+        """Op-equivalent of the padded schedule (what the array slots
+        actually sweep) — the energy/latency basis before skipping."""
+        return self.hl * 2 * (self.n_q_sched * self.d_pad * self.d_pad
+                              + self.n_q_sched * self.n_kv_sched * self.d_pad)
+
+    @property
+    def ops_sched_shard(self) -> int:
+        """Scheduled ops of the largest per-macro query shard — the
+        critical path under data-parallel scale-out."""
+        nq = math.ceil(self.n_q_sched / self.n_macros)
+        return self.hl * 2 * (nq * self.d_pad * self.d_pad
+                              + nq * self.n_kv_sched * self.d_pad)
+
+    # ------------------------------------------------------ utilization
+    @property
+    def util_geometry(self) -> float:
+        """Array cells holding real weights / cells swept: (D/D_pad)^2
+        folded with the row-padding of the pair loop."""
+        return self.ops_logical / max(self.ops_sched, 1)
+
+    @property
+    def util_parallel(self) -> float:
+        """Query-shard balance across macros (ceil waste)."""
+        return self.n_q_sched / (self.n_macros
+                                 * math.ceil(self.n_q_sched / self.n_macros))
+
+    # ----------------------------------------------------------- cycles
+    @property
+    def mac_cycles_total(self) -> int:
+        """Bit-plane-pair array cycles of the dense schedule (one
+        (i, j, tile_a, tile_b, i*, j*) per cycle), all heads/layers."""
+        return (self.hl * self.n_q_sched * self.n_kv_sched
+                * self.d_tiles * self.d_tiles * self.bits * self.bits)
+
+    @property
+    def weight_tiles(self) -> int:
+        """Distinct weight tiles swept per event: per head, per layer,
+        TD^2 tile pairs of that head's W_QK."""
+        return self.hl * self.d_tiles * self.d_tiles
+
+    def weight_load_cycles(self, spec: MacroSpec) -> int:
+        """Array-write cycles to place every weight tile once (one word
+        line per cycle). Hidden behind the MAC phase when
+        double-buffered."""
+        return self.weight_tiles * spec.rows
+
+    def weight_words(self, spec: MacroSpec) -> int:
+        """8-bit global-buffer words read to load the weight tiles, per
+        macro (scale-out replicates weights on every macro)."""
+        return self.weight_tiles * spec.rows * spec.cols
+
+
+def schedule_for(n_q: int, n_kv: int, d: int, *, spec: MacroSpec,
+                 heads: int = 1, layers: int = 1, n_macros: int = 1,
+                 n_q_sched: int = 0, n_kv_sched: int = 0) -> TileSchedule:
+    if min(n_q, n_kv, d) <= 0:
+        raise ValueError(f"empty workload ({n_q}, {n_kv}, {d})")
+    if spec.rows != spec.cols:
+        raise ValueError("tiling assumes a square weight array")
+    td = math.ceil(d / spec.rows)
+    return TileSchedule(n_q=n_q, n_kv=n_kv, d=d,
+                        n_q_sched=max(n_q_sched, n_q),
+                        n_kv_sched=max(n_kv_sched, n_kv),
+                        d_pad=td * spec.rows, d_tiles=td,
+                        heads=heads, layers=layers, n_macros=n_macros,
+                        bits=spec.input_bits)

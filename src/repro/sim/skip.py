@@ -1,0 +1,181 @@
+"""Hierarchical zero-value bit skipping — exact counts (paper §III.C).
+
+The macro skips in two levels, coarse first:
+
+  L1 (rows):      an input row (token) whose int8 value vector is all
+                  zero never activates anything — every word-line event
+                  under it is skipped wholesale, before bit decomposition.
+  L2 (bit pairs): within surviving row pairs, a word-line event
+                  (i, j, i', j', i*, j*) fires only when
+                  xa[i,i'](i*) AND xb[j,j'](j*) is 1; a whole array
+                  *cycle* (one (i, j, i*, j*) bit-plane pair across the
+                  64x64 cells) is skipped when either side's bit-plane
+                  fragment is all zero.
+
+Both levels factorize over the two operands (the AND of independent
+bits), so exact counts need only compact per-operand tallies — no 6-D
+event tensor, no floats. Every count here is a Python int (arbitrary
+precision); the same factorization `core/zeroskip.skip_stats` uses,
+extended with the per-row / per-bit-plane granularity the cycle
+schedule needs.
+
+Two parallel accounting domains:
+
+  events — word-line add events (what *energy* follows): one event per
+           (i, j, i', j', i*, j*) tuple, counted over the logical
+           operand dims; `skip.events_fired == zeroskip fired_events`.
+  cycles — array bit-plane-pair cycles (what *latency* follows): one
+           cycle per (i, j, d-tile-a, d-tile-b, i*, j*); a cycle
+           issues iff any of its word lines would fire.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+
+class OperandStats(NamedTuple):
+    """Exact bit tallies of one int8 operand (N, D), w.r.t. a d-tile
+    width (the macro row count). All counts are Python ints."""
+    rows: int        # N — logical rows described (zero rows included)
+    d: int           # logical feature dim
+    bits: int        # K
+    tile_d: int      # macro array rows the d axis is tiled by
+    ones: int        # total 1-bits over all (row, dim, plane)
+    nz_rows: int     # rows with any 1-bit            (L1 granularity)
+    nz_frags: int    # (row, d-tile) fragments with any 1-bit
+    nz_planes: int   # (row, d-tile, plane) planes with any 1-bit (L2)
+
+    @property
+    def d_tiles(self) -> int:
+        return max(1, math.ceil(self.d / self.tile_d))
+
+    @property
+    def bit_density(self) -> float:
+        """Fraction of 1-bits over the logical operand."""
+        return self.ones / max(self.rows * self.d * self.bits, 1)
+
+    def to_dict(self) -> dict:
+        return {"rows": self.rows, "ones": self.ones,
+                "nz_rows": self.nz_rows, "nz_frags": self.nz_frags,
+                "nz_planes": self.nz_planes}
+
+
+def operand_stats(x, tile_d: int = 64, bits: int = 8) -> OperandStats:
+    """Exact tallies for an int8 array (N, D). Host-side numpy popcount
+    (int64 — no device round-trip, no f32 truncation). The coarse
+    ``ones`` total is the same count ``core/zeroskip`` computes
+    (skip_stats / skip_stats_chunked); tests/test_sim.py pins the two
+    implementations to identical fired/total events."""
+    x = np.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"operand must be (N, D), got {x.shape}")
+    n, d = x.shape
+    u = np.where(x < 0, x.astype(np.int64) + (1 << bits),
+                 x.astype(np.int64)).astype(np.uint32)
+    shifts = np.arange(bits, dtype=np.uint32)
+    planes = ((u[..., None] >> shifts) & 1).astype(np.uint8)  # (n, d, K)
+    td = max(1, math.ceil(d / tile_d))
+    padded = np.zeros((n, td * tile_d, bits), np.uint8)
+    padded[:, :d] = planes
+    frags = padded.reshape(n, td, tile_d, bits)
+    plane_nz = frags.any(axis=2)                              # (n, td, K)
+    frag_nz = plane_nz.any(axis=2)                            # (n, td)
+    return OperandStats(rows=n, d=d, bits=bits, tile_d=tile_d,
+                        ones=int(planes.sum(dtype=np.int64)),
+                        nz_rows=int(frag_nz.any(axis=1).sum()),
+                        nz_frags=int(frag_nz.sum()),
+                        nz_planes=int(plane_nz.sum()))
+
+
+def zero_stats(rows: int, d: int, tile_d: int = 64,
+               bits: int = 8) -> OperandStats:
+    """Stats of `rows` all-zero rows (padding)."""
+    return OperandStats(rows=rows, d=d, bits=bits, tile_d=tile_d,
+                        ones=0, nz_rows=0, nz_frags=0, nz_planes=0)
+
+
+def merge_stats(parts: Sequence[OperandStats]) -> OperandStats:
+    """Concatenate row-wise: tallies add (rows must share d/bits/tile)."""
+    if not parts:
+        raise ValueError("merge_stats needs at least one operand")
+    head = parts[0]
+    for p in parts[1:]:
+        if (p.d, p.bits, p.tile_d) != (head.d, head.bits, head.tile_d):
+            raise ValueError("merge_stats: mismatched operand geometry")
+    return OperandStats(rows=sum(p.rows for p in parts), d=head.d,
+                        bits=head.bits, tile_d=head.tile_d,
+                        ones=sum(p.ones for p in parts),
+                        nz_rows=sum(p.nz_rows for p in parts),
+                        nz_frags=sum(p.nz_frags for p in parts),
+                        nz_planes=sum(p.nz_planes for p in parts))
+
+
+class SkipCounts(NamedTuple):
+    """Exact hierarchical counts for one (q, kv) score pair — per head
+    per layer (multiply by heads x layers for workload totals).
+
+    Event domain (energy): logical dims; padding rows/cols of the
+    schedule never fire, so `events_sched_total >= events_total`.
+    Cycle domain (latency): array bit-plane-pair cycles over the
+    *scheduled* pair loop (padded rows cost cycles only without skip).
+    """
+    # word-line events
+    events_total: int          # Nq * Nkv * D^2 * K^2 (logical — the
+    #                            zeroskip.skip_stats total)
+    events_sched_total: int    # scheduled incl. row/dim padding
+    events_after_row: int      # surviving L1 (both rows non-zero)
+    events_fired: int          # both gating bits 1 (== zeroskip fired)
+    # array cycles (one bit-plane pair across the tile per cycle)
+    cycles_total: int          # Nq_sched * Nkv_sched * TD^2 * K^2
+    cycles_after_row: int      # surviving L1 at fragment granularity
+    cycles_issued: int         # cycles with >= 1 firing word line
+
+    @property
+    def skip_fraction(self) -> float:
+        """Fired-event fraction removed, over the *scheduled* events
+        (equals zeroskip.skip_stats.skip_fraction when unpadded)."""
+        return 1.0 - self.events_fired / max(self.events_sched_total, 1)
+
+    @property
+    def skip_fraction_rows(self) -> float:
+        """Share of scheduled events removed by L1 alone."""
+        return 1.0 - self.events_after_row / max(self.events_sched_total, 1)
+
+    @property
+    def cycle_skip_fraction(self) -> float:
+        return 1.0 - self.cycles_issued / max(self.cycles_total, 1)
+
+
+def pair_skip_counts(sq: OperandStats, skv: OperandStats, *,
+                     n_q_sched: int = 0, n_kv_sched: int = 0) -> SkipCounts:
+    """Exact counts for scores between operands described by sq / skv.
+
+    n_q_sched / n_kv_sched: rows the *schedule* actually sweeps (>=
+    logical rows; e.g. block-padded cache views). Padding rows are all
+    zero: they add scheduled events/cycles but never fire.
+
+    Factorizations (all exact):
+      fired       = ones_q x ones_kv
+      after L1    = nz_rows_q x nz_rows_kv x D^2 K^2   (events)
+                    nz_frags_q x nz_frags_kv x K^2     (cycles)
+      issued      = nz_planes_q x nz_planes_kv         (cycles)
+    """
+    if (sq.d, sq.bits, sq.tile_d) != (skv.d, skv.bits, skv.tile_d):
+        raise ValueError("pair_skip_counts: mismatched operand geometry")
+    d, k, td = sq.d, sq.bits, sq.d_tiles
+    nq, nk = sq.rows, skv.rows
+    nqs, nks = max(n_q_sched, nq), max(n_kv_sched, nk)
+    d_pad = td * sq.tile_d
+    k2 = k * k
+    return SkipCounts(
+        events_total=nq * nk * d * d * k2,
+        events_sched_total=nqs * nks * d_pad * d_pad * k2,
+        events_after_row=sq.nz_rows * skv.nz_rows * d * d * k2,
+        events_fired=sq.ones * skv.ones,
+        cycles_total=nqs * nks * td * td * k2,
+        cycles_after_row=sq.nz_frags * skv.nz_frags * k2,
+        cycles_issued=sq.nz_planes * skv.nz_planes,
+    )

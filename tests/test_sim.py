@@ -1,0 +1,325 @@
+"""repro.sim — the cycle-level CIM macro simulator: analytic-model
+equivalence (the == cross-check DESIGN.md §9 promises), exact
+hierarchical-skip accounting vs core/zeroskip, tiling/scale-out
+geometry, Fig. 7 buffer consistency, and the serving engine's
+trace-capture hook (off the hot path, replayable end-to-end)."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy, zeroskip
+from repro.serving.engine import Engine, Request
+from repro.sim import (GlobalBuffer, MacroSim, Trace, dense_workload,
+                       merge_stats, operand_stats, pair_skip_counts,
+                       reference_vit_operands, schedule_for,
+                       synthetic_workload, workload_from_arrays,
+                       zero_stats)
+
+
+# ------------------------------------------------- analytic equivalence
+
+def test_skip_off_equals_analytic_model_exactly():
+    """The acceptance cross-check: skipping disabled + 100% utilization
+    => simulated energy/latency EQUAL energy.macro_energy_j /
+    macro_latency_s (==, not allclose)."""
+    _, qx = reference_vit_operands()
+    rep = MacroSim(zero_skip=False).simulate(workload_from_arrays(qx))
+    ops = energy.score_ops(197, 64)
+    assert rep.ops_logical == ops
+    assert rep.macro_energy_j == energy.macro_energy_j(ops)
+    assert rep.latency_s == energy.macro_latency_s(ops)
+    assert rep.utilization == pytest.approx(1.0)
+    assert rep.effective_gops == pytest.approx(energy.PAPER_MACRO.peak_gops)
+    # the report's analytic column says the same thing
+    assert rep.analytic_energy_j == rep.macro_energy_j
+    assert rep.analytic_latency_s == rep.latency_s
+
+
+def test_dense_operands_with_skip_on_also_match_analytic():
+    """A fully dense workload gives the skip logic nothing to remove:
+    every word-line event fires and the analytic equality still holds
+    with zero_skip=True."""
+    wl = dense_workload(96, 96, 64)
+    rep = MacroSim(zero_skip=True).simulate(wl)
+    ops = energy.score_ops(96, 64)
+    assert rep.skip_fraction == 0.0
+    assert rep.macro_energy_j == energy.macro_energy_j(ops)
+    assert rep.latency_s == energy.macro_latency_s(ops)
+
+
+def test_vit_reference_reproduces_paper_claims():
+    """>=55% skipped events and TOPS/W within 10% of the paper's 34.1
+    on the reference ViT workload (N=197, D=64, padded tail)."""
+    rep = MacroSim().simulate(synthetic_workload("vit"))
+    assert rep.skip_fraction >= 0.55
+    spec_tw = energy.PAPER_MACRO.tops_per_w
+    assert abs(rep.tops_per_w - spec_tw) <= 0.10 * spec_tw
+
+
+# ------------------------------------------------------ skip accounting
+
+def test_sim_skip_fraction_matches_zeroskip_exactly(rng):
+    x = rng.integers(-128, 128, (64, 64)).astype(np.int8)
+    x[48:] = 0
+    rep = MacroSim().simulate(workload_from_arrays(x))
+    st = zeroskip.skip_stats(jnp.asarray(x), jnp.asarray(x))
+    assert rep.wl_events_fired == st.fired_events
+    assert rep.wl_events_total == st.total_events
+    assert rep.skip_fraction == float(st.skip_fraction)
+
+
+def test_hierarchy_row_level_closed_form(rng):
+    """L1 (whole all-zero rows) has a closed form the tallies must hit:
+    surviving events = (nonzero rows)^2 x D^2 x K^2."""
+    n, d, nz = 32, 64, 20
+    x = rng.integers(1, 128, (n, d)).astype(np.int8)   # no zero values
+    x[nz:] = 0
+    s = operand_stats(x)
+    assert (s.rows, s.nz_rows, s.nz_frags) == (n, nz, nz)
+    cnt = pair_skip_counts(s, s)
+    assert cnt.events_after_row == nz * nz * d * d * 64
+    assert cnt.cycles_after_row == nz * nz * 64
+    # hierarchy is nested: fired <= after-row <= total, in both domains
+    assert cnt.events_fired <= cnt.events_after_row <= cnt.events_total
+    assert cnt.cycles_issued <= cnt.cycles_after_row <= cnt.cycles_total
+    rep = MacroSim().simulate(workload_from_arrays(x))
+    assert rep.skip_fraction_rows == pytest.approx(1 - (nz / n) ** 2)
+    assert rep.skip_fraction >= rep.skip_fraction_rows
+
+
+def test_operand_stats_hand_case_and_merge():
+    # rows [3, 0]: 3 = 0b11 -> ones 2, one nonzero plane... no: planes
+    # 0 and 1 are both nonzero -> nz_planes 2
+    s = operand_stats(np.asarray([[3], [0]], np.int8), tile_d=64)
+    assert (s.ones, s.nz_rows, s.nz_frags, s.nz_planes) == (2, 1, 1, 2)
+    z = zero_stats(5, d=1)
+    m = merge_stats([s, z])
+    assert (m.rows, m.ones, m.nz_rows) == (7, 2, 1)
+    with pytest.raises(ValueError):
+        merge_stats([s, zero_stats(1, d=2)])
+
+
+def test_schedule_padding_counts_as_skipped(rng):
+    """Block-padded schedules (n_kv_sched > n_kv) add all-zero rows:
+    more scheduled events, identical fired events."""
+    x = rng.integers(-128, 128, (16, 64)).astype(np.int8)
+    s = operand_stats(x)
+    base = pair_skip_counts(s, s)
+    padded = pair_skip_counts(s, s, n_kv_sched=24)
+    assert padded.events_fired == base.events_fired
+    assert padded.events_sched_total == base.events_sched_total * 24 // 16
+    assert padded.skip_fraction > base.skip_fraction
+
+
+# --------------------------------------------------- tiling / scale-out
+
+def test_tiling_d_multiple_of_array_keeps_full_utilization(rng):
+    x = rng.integers(1, 128, (32, 128)).astype(np.int8)
+    rep = MacroSim(zero_skip=False).simulate(workload_from_arrays(x))
+    ops = energy.score_ops(32, 128)
+    assert rep.macro_energy_j == energy.macro_energy_j(ops)
+    assert rep.latency_s == energy.macro_latency_s(ops)
+    # 2x2 weight tiles swept, 4 tile loads, still 100% geometry util
+    assert rep.weight_load_cycles == 4 * 64
+    assert rep.utilization == pytest.approx(1.0)
+
+
+def test_tiling_ragged_d_pays_geometry_padding(rng):
+    x = rng.integers(1, 128, (32, 100)).astype(np.int8)
+    ts = schedule_for(32, 32, 100, spec=energy.PAPER_MACRO)
+    assert ts.d_pad == 128 and ts.d_tiles == 2
+    assert ts.ops_sched > ts.ops_logical
+    rep = MacroSim(zero_skip=False).simulate(workload_from_arrays(x))
+    # latency inflates by exactly the wasted-cell share of each cycle:
+    # (128/100)^2 of the array holds no real weight
+    assert rep.latency_s == pytest.approx(
+        energy.macro_latency_s(ts.ops_logical) * (128 / 100) ** 2)
+    assert rep.utilization == pytest.approx((100 / 128) ** 2)
+
+
+def test_utilization_bounded_by_one_on_padded_sparse_events(rng):
+    """The dense-engine decode regime: one query row against a heavily
+    block-padded sparse kv view. Utilization and effective GOPS must
+    stay below the macro's peak (issued cycles cannot outrun the
+    logical work they retire)."""
+    from repro.sim import ScoreWorkload
+    x = rng.integers(-128, 128, (5, 128)).astype(np.int8)
+    wl = ScoreWorkload(stats_q=operand_stats(x[:1]),
+                       stats_kv=operand_stats(x), heads=6, layers=4,
+                       n_kv_sched=96, shared=True, kind="decode")
+    for sim in (MacroSim(), MacroSim(zero_skip=False)):
+        rep = sim.simulate(wl)
+        assert rep.utilization <= 1.0 + 1e-12
+        assert rep.effective_gops \
+            <= energy.PAPER_MACRO.peak_gops * (1 + 1e-12)
+    # skipping the padded rows is pure latency win
+    assert MacroSim().simulate(wl).latency_s \
+        < MacroSim(zero_skip=False).simulate(wl).latency_s
+
+
+def test_multi_macro_shards_query_rows(rng):
+    x = rng.integers(1, 128, (128, 64)).astype(np.int8)
+    wl = workload_from_arrays(x)
+    r1 = MacroSim(zero_skip=False).simulate(wl)
+    r2 = MacroSim(zero_skip=False, n_macros=2).simulate(wl)
+    assert r2.latency_s == pytest.approx(r1.latency_s / 2)
+    assert r2.macro_energy_j == r1.macro_energy_j      # same total work
+    # odd shard: ceil imbalance shows up as < 1 parallel utilization
+    r3 = MacroSim(zero_skip=False, n_macros=3).simulate(wl)
+    ts = schedule_for(128, 128, 64, spec=energy.PAPER_MACRO, n_macros=3)
+    assert r3.latency_s == pytest.approx(
+        ts.ops_sched_shard / (energy.PAPER_MACRO.peak_gops * 1e9))
+    assert ts.util_parallel == pytest.approx(128 / (3 * 43))
+
+
+# ------------------------------------------------------- buffer / Fig. 7
+
+def test_buffer_traffic_matches_fig7_model(rng):
+    """Self-attention X traffic == energy.accesses_wqk_cim exactly (one
+    source of truth for the Fig. 7 calibration) and the baseline ratio
+    reproduces the paper's 6.9x."""
+    _, qx = reference_vit_operands()
+    rep = MacroSim().simulate(workload_from_arrays(qx))
+    assert rep.x_words == energy.accesses_wqk_cim(197, 64)
+    assert rep.baseline_x_words == energy.accesses_baseline_cim(197, 64)
+    assert abs(rep.baseline_x_words / rep.x_words - 6.9) < 0.35
+    # distinct operands stream the query side on top of the kv pass
+    tr = GlobalBuffer().traffic(8, 197, 64, shared=False, weight_words=0)
+    assert tr.x_words == energy.accesses_wqk_cim(197, 64) + 8 * 64
+
+
+def test_buffer_traffic_scales_with_layers_not_heads(rng):
+    """Each attention layer re-streams its activations; the heads of
+    one layer share a single X pass (same operand, different W_QK)."""
+    from repro.sim import ScoreWorkload
+    x = rng.integers(-128, 128, (16, 64)).astype(np.int8)
+    s = operand_stats(x)
+    base = MacroSim().simulate(
+        ScoreWorkload(stats_q=s, stats_kv=s, shared=True))
+    deep = MacroSim().simulate(
+        ScoreWorkload(stats_q=s, stats_kv=s, shared=True,
+                      heads=4, layers=3))
+    assert deep.x_words == 3 * base.x_words
+    assert deep.baseline_x_words == 3 * base.baseline_x_words
+    assert deep.w_words == 12 * base.w_words      # per-head W_QK tiles
+
+
+def test_weight_load_exposure_and_residency(rng):
+    x = rng.integers(1, 128, (32, 64)).astype(np.int8)
+    wl = workload_from_arrays(x)
+    hidden = MacroSim(zero_skip=False).simulate(wl)
+    exposed = MacroSim(zero_skip=False, double_buffer=False).simulate(wl)
+    spec = energy.PAPER_MACRO
+    assert exposed.latency_s == pytest.approx(
+        hidden.latency_s + hidden.weight_load_cycles / spec.freq_hz)
+    assert not exposed.weight_load_hidden
+    # weight-stationary serving: residency pays the tile loads once
+    per_event = MacroSim().simulate([wl, wl])
+    resident = MacroSim(weights_resident=True).simulate([wl, wl])
+    assert resident.w_words * 2 == per_event.w_words
+    assert resident.macro_energy_j == per_event.macro_energy_j
+
+
+# --------------------------------------------------------- trace capture
+
+@pytest.fixture(scope="module")
+def tiny():
+    """One reduced W8A8 transformer shared by the trace tests."""
+    from repro.configs.base import get_arch, reduced
+    from repro.models.model import build_model
+    cfg = reduced(get_arch("qwen2.5-14b"), num_layers=2,
+                  score_mode="wqk_int8")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _engine(tiny, capture, schedule="auto"):
+    model, params = tiny
+    return Engine(model, params, max_slots=2, max_len=64, block_size=8,
+                  prefill_chunk=16, capture_trace=capture,
+                  decode_schedule=schedule)
+
+
+def _requests(n=3):
+    return [Request(rid=i, tokens=[1] + list(range(5, 11 + i)),
+                    max_new_tokens=4, eos_id=None) for i in range(n)]
+
+
+def test_trace_capture_leaves_outputs_untouched(tiny):
+    e_cap = _engine(tiny, True)
+    r_cap = _requests()
+    e_cap.run(r_cap)
+    e_off = _engine(tiny, False)
+    r_off = _requests()
+    e_off.run(r_off)
+    assert [r.output for r in r_cap] == [r.output for r in r_off]
+    assert e_off.trace is None
+    tr = e_cap.trace.trace
+    assert {e.kind for e in tr.events} == {"prefill", "decode"}
+    # every decode tick of an active slot recorded one event, with the
+    # kv operand covering exactly the tokens written so far
+    dec = [e for e in tr.events if e.kind == "decode"]
+    assert all(e.stats_q.rows == 1 for e in dec)
+    assert all(e.stats_kv.rows <= e.n_kv_sched for e in tr.events)
+    assert tr.meta.d == 128 and tr.meta.layers == 2
+
+
+def test_trace_capture_rejects_out_of_vocab_tokens(tiny):
+    """The jitted gather clamps out-of-range ids silently; the trace
+    hook must refuse them instead of tallying an empty row."""
+    eng = _engine(tiny, True)
+    vocab = eng.trace.embed.shape[0]
+    with pytest.raises(ValueError, match="embedding table"):
+        eng.trace.record("decode", [vocab], [1, vocab])
+
+
+def test_trace_roundtrip_and_replay(tiny, tmp_path):
+    eng = _engine(tiny, True)
+    eng.run(_requests())
+    path = tmp_path / "trace.json"
+    eng.trace.save(str(path))
+    tr = Trace.load(str(path))
+    assert tr.to_dict() == eng.trace.trace.to_dict()
+    rep = MacroSim().simulate(tr.workloads())
+    assert rep.events == len(tr.events) > 0
+    assert 0.0 < rep.skip_fraction < 1.0
+    assert rep.latency_s > 0 and rep.energy_j > 0
+    # the replay is schedule-aware: scheduled ops exceed logical ops
+    # because the engine block-pads its score sweeps
+    assert rep.ops_sched > rep.ops_logical
+
+
+def test_trace_records_the_decode_schedule_width(tiny):
+    """stream records the early-exit bound, gather the full view."""
+    e_s = _engine(tiny, True, schedule="stream")
+    e_s.run(_requests(1))
+    e_g = _engine(tiny, True, schedule="gather")
+    e_g.run(_requests(1))
+    dec_s = [e for e in e_s.trace.trace.events if e.kind == "decode"]
+    dec_g = [e for e in e_g.trace.trace.events if e.kind == "decode"]
+    full = e_g.blocks_per_seq * e_g.block_size
+    assert all(e.n_kv_sched == full for e in dec_g)
+    assert all(e.n_kv_sched < full for e in dec_s)
+    assert [e.stats_kv.rows for e in dec_s] \
+        == [e.stats_kv.rows for e in dec_g]
+
+
+def test_simulate_cli(tiny, tmp_path):
+    from repro.launch import simulate as cli
+    out = tmp_path / "sim.json"
+    assert cli.main(["--workload", "vit", "--json", str(out)]) == 0
+    d = json.loads(out.read_text())
+    assert d["skip_fraction"] >= 0.55
+    assert d["events"] == 1
+    # trace replay path
+    eng = _engine(tiny, True)
+    eng.run(_requests())
+    tpath = tmp_path / "t.json"
+    eng.trace.save(str(tpath))
+    assert cli.main(["--trace", str(tpath), "--macros", "2",
+                     "--weights-resident"]) == 0

@@ -26,10 +26,85 @@ def test_scaling_to_28nm_matches_table1():
     assert s.tops_per_w > 100
 
 
+def test_scaling_identity_at_same_operating_point():
+    """Stillmaker scaling to the spec's own node/vdd/freq is exactly
+    the identity — power and area come back untouched."""
+    m = energy.PAPER_MACRO
+    s = energy.scale_to_node(m, nm=m.tech_nm, vdd=m.vdd, freq_hz=m.freq_hz)
+    assert s == m
+
+
+def test_scaling_laws_factor_as_documented():
+    """P2 = P1 (nm2/nm1) (V2/V1)^2 (f2/f1); A2 = A1 (nm2/nm1)^2 —
+    each knob scales independently, everything else is invariant."""
+    m = energy.PAPER_MACRO
+    half_nm = energy.scale_to_node(m, nm=m.tech_nm / 2, vdd=m.vdd,
+                                   freq_hz=m.freq_hz)
+    assert half_nm.power_w == pytest.approx(m.power_w / 2)
+    assert half_nm.area_mm2 == pytest.approx(m.area_mm2 / 4)
+    half_v = energy.scale_to_node(m, nm=m.tech_nm, vdd=m.vdd / 2,
+                                  freq_hz=m.freq_hz)
+    assert half_v.power_w == pytest.approx(m.power_w / 4)
+    assert half_v.area_mm2 == pytest.approx(m.area_mm2)
+    double_f = energy.scale_to_node(m, nm=m.tech_nm, vdd=m.vdd,
+                                    freq_hz=2 * m.freq_hz)
+    assert double_f.power_w == pytest.approx(2 * m.power_w)
+    # geometry, precision and the op-rate benchmark never scale
+    for s in (half_nm, half_v, double_f):
+        assert (s.rows, s.cols, s.weight_bits, s.input_bits) \
+            == (m.rows, m.cols, m.weight_bits, m.input_bits)
+        assert s.peak_gops == m.peak_gops
+    # two successive scalings compose: 65 -> 40 -> 28 == 65 -> 28
+    via = energy.scale_to_node(energy.scale_to_node(m, nm=40, vdd=0.9),
+                               nm=28, vdd=0.8)
+    direct = energy.scale_to_node(m, nm=28, vdd=0.8)
+    assert via.power_w == pytest.approx(direct.power_w)
+    assert via.area_mm2 == pytest.approx(direct.area_mm2)
+
+
+def test_scaling_improves_tops_per_w_by_the_power_ratio():
+    m = energy.PAPER_MACRO
+    s = energy.scale_to_node(m, nm=28, vdd=0.8)
+    assert s.tops_per_w == pytest.approx(m.tops_per_w
+                                         * m.power_w / s.power_w)
+
+
 def test_fig7_memory_access_and_energy_ratios():
     acc_ratio, e_ratio = energy.fig7_model()
     assert abs(acc_ratio - 6.9) < 0.35              # paper: 6.9x
     assert abs(e_ratio - 4.9) < 0.6                 # paper: 4.9x
+
+
+def test_fig7_access_model_closed_forms():
+    """The two access counters are documented formulas, not fit
+    curves: baseline = 8 X-passes (stream Q/K arrays, write Q/K back,
+    transpose rd+wr, re-stream both); ours = one pass + the calibrated
+    capacity-miss fraction."""
+    for n, d in ((197, 64), (64, 64), (1024, 128)):
+        assert energy.accesses_baseline_cim(n, d) == 8 * n * d
+        assert energy.accesses_wqk_cim(n, d) \
+            == int(round(n * d * (1.0 + energy.BUFFER_MISS)))
+    # the access ratio is therefore workload-independent: 8 / 1.16
+    a197 = energy.accesses_baseline_cim(197, 64) \
+        / energy.accesses_wqk_cim(197, 64)
+    a64 = energy.accesses_baseline_cim(64, 64) \
+        / energy.accesses_wqk_cim(64, 64)
+    assert a197 == pytest.approx(8 / (1 + energy.BUFFER_MISS), rel=1e-3)
+    assert a64 == pytest.approx(a197, rel=1e-3)
+
+
+def test_fig7_energy_ratio_grows_with_zero_skip():
+    """The skip fraction only helps OUR side (the baseline cannot
+    bit-skip), so the energy advantage is monotone in it, and with
+    skipping off it falls back toward the pure access ratio."""
+    ratios = [energy.fig7_model(skip_fraction=s)[1]
+              for s in (0.0, 0.3, 0.55, 0.8)]
+    assert ratios == sorted(ratios)
+    acc, e0 = energy.fig7_model(skip_fraction=0.0)
+    # with identical (skipless) compute on both sides the advantage is
+    # pure memory, diluted below the access ratio by the shared
+    # compute term — but the fold still wins
+    assert 1.0 < e0 < acc
 
 
 def test_zero_skip_counts_exact_small():
@@ -70,6 +145,38 @@ def test_zero_skip_rejects_int32_overflow_workloads():
 
     with pytest.raises(ValueError, match="int32"):
         zeroskip.skip_stats(_Fake(), big)
+
+
+def test_skip_stats_chunked_matches_unchunked(rng):
+    """Bit-identical to skip_stats for any chunking of the rows (the
+    factorized count is a plain sum over row chunks)."""
+    x = rng.integers(-128, 128, (100, 48)).astype(np.int8)
+    y = rng.integers(-128, 128, (37, 48)).astype(np.int8)
+    a = zeroskip.skip_stats(jnp.asarray(x), jnp.asarray(y))
+    for chunk in (1, 7, 64, 4096):
+        b = zeroskip.skip_stats_chunked(jnp.asarray(x), jnp.asarray(y),
+                                        chunk=chunk)
+        assert (b.total_events, b.fired_events) \
+            == (a.total_events, a.fired_events)
+        assert float(b.bit_density_a) == float(a.bit_density_a)
+        assert float(b.bit_density_b) == float(a.bit_density_b)
+
+
+def test_skip_stats_chunked_handles_past_int32_bound():
+    """A serving-trace-sized operand (N * D * bits >= 2^31) is rejected
+    by skip_stats but exactly counted by the chunked variant — the
+    workload class the satellite exists for."""
+    n, d = 1 << 15, 8192               # 2^15 * 8192 * 8 == 2^31
+    x = np.zeros((n, d), np.int8)
+    x[0, 0] = 3                        # 2 one-bits
+    x[n - 1, d - 1] = -1               # 8 one-bits (two's complement)
+    y = np.asarray([[1]], np.int8)
+    with pytest.raises(ValueError, match="chunk"):
+        zeroskip.skip_stats(x, y)
+    st = zeroskip.skip_stats_chunked(x, x, chunk=4096)
+    assert st.fired_events == 10 * 10
+    assert st.total_events == n * n * d * d * 64
+    assert float(st.skip_fraction) > 0.999999
 
 
 def test_zero_skip_padding_reaches_paper_claim(rng):
