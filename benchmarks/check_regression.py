@@ -3,11 +3,16 @@ vs the committed baseline.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline BENCH_baseline.json --current BENCH_scores.json
-    PYTHONPATH=src python -m benchmarks.check_regression \
-        --baseline BENCH_baseline.json --current BENCH_serving.json
 
-Two gated sections, auto-detected from whatever the --current file
-carries (the baseline holds both):
+``--current`` is repeatable — the unified CI gate runs ONE invocation
+over every bench artifact the workflow produced:
+
+    python -m benchmarks.check_regression --baseline BENCH_baseline.json \
+        --current BENCH_scores.json --current BENCH_serving.json \
+        --current BENCH_sharded.json --current BENCH_sim.json
+
+Gated sections are auto-detected from whatever each --current file
+carries (the baseline holds the normalized ones):
 
   * ``backends``    — the score-backend sweep (BENCH_scores.json),
     rows keyed by backend name, metric ``seconds_per_call``,
@@ -40,6 +45,11 @@ of machine speed. ``BENCH_sim.json``'s ``sim`` section is gated this
 way: the reference ViT workload must keep >=55% zero-skip and a macro
 TOPS/W within 10% of the paper's 34.1, and the skip-off simulation
 must stay exactly equal to the analytic model.
+``BENCH_sharded.json``'s ``sharded`` section is floors too: the
+mesh-sharded serving engine must keep a >=2x per-device HBM reduction
+(and >=3x admitted concurrency at equal per-device HBM) at 4-way
+tensor parallelism, with greedy outputs and per-token logits matching
+the single-device oracle.
 """
 from __future__ import annotations
 
@@ -63,6 +73,12 @@ FLOORS = {
         ("vit_reference", "tops_per_w", "<=", 34.09 * 1.10),
         ("vit_reference_noskip", "analytic_exact", "==", True),
         ("trace_replay", "events", ">=", 1),
+    ],
+    "sharded": [
+        ("scale", "per_device_hbm_reduction_4way", ">=", 2.0),
+        ("scale", "admitted_ratio_equal_hbm", ">=", 3.0),
+        ("scale", "outputs_equal", "==", True),
+        ("scale", "logits_ok", "==", True),
     ],
 }
 
@@ -157,7 +173,10 @@ def check(baseline: dict, current: dict, threshold: float,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_baseline.json")
-    ap.add_argument("--current", default="BENCH_scores.json")
+    ap.add_argument("--current", action="append", default=None,
+                    help="bench file(s) to gate; repeatable — one "
+                         "invocation gates every artifact a CI run "
+                         "produced (default: BENCH_scores.json)")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="allowed fractional latency regression (0.25 = "
                          "25%%)")
@@ -170,30 +189,39 @@ def main(argv=None) -> int:
                          "spot; loose because machines differ)")
     args = ap.parse_args(argv)
 
-    baseline, current = _load(args.baseline), _load(args.current)
-    sections = [s for s in SECTIONS if s in current]
-    floor_sections = [s for s in FLOORS if s in current]
-    if not sections and not floor_sections:
-        print(f"no gate-able sections in {args.current} "
-              f"(known: {sorted(SECTIONS)} + floors {sorted(FLOORS)})")
-        return 1
+    baseline = _load(args.baseline)
     failures = []
-    for sec in floor_sections:
-        print(f"bench-floor gate [{sec}] (absolute bounds, no baseline):")
-        failures += check_floors(sec, current[sec])
-    for sec in sections:
-        reference, metric = SECTIONS[sec]
-        mode = "absolute" if args.absolute else f"normalized to {reference!r}"
-        print(f"bench-regression gate [{sec}] ({mode}, threshold "
-              f"{args.threshold:.0%}):")
-        if sec not in baseline:
-            print(f"  [new ] section {sec!r} has no baseline — skipped")
+    for cur_path in args.current or ["BENCH_scores.json"]:
+        current = _load(cur_path)
+        sections = [s for s in SECTIONS if s in current]
+        floor_sections = [s for s in FLOORS if s in current]
+        if not sections and not floor_sections:
+            # fail, but keep gating the remaining files so the summary
+            # shows everything wrong with this run, not just the first
+            print(f"no gate-able sections in {cur_path} "
+                  f"(known: {sorted(SECTIONS)} + floors {sorted(FLOORS)})")
+            failures.append(f"{cur_path}: no gate-able sections")
             continue
-        failures += check(_rows(baseline[sec], metric),
-                          _rows(current[sec], metric),
-                          args.threshold, args.absolute,
-                          ref_threshold=args.ref_threshold,
-                          reference=reference, metric=metric)
+        print(f"== {cur_path} ==")
+        for sec in floor_sections:
+            print(f"bench-floor gate [{sec}] (absolute bounds, "
+                  f"no baseline):")
+            failures += check_floors(sec, current[sec])
+        for sec in sections:
+            reference, metric = SECTIONS[sec]
+            mode = "absolute" if args.absolute \
+                else f"normalized to {reference!r}"
+            print(f"bench-regression gate [{sec}] ({mode}, threshold "
+                  f"{args.threshold:.0%}):")
+            if sec not in baseline:
+                print(f"  [new ] section {sec!r} has no baseline — "
+                      f"skipped")
+                continue
+            failures += check(_rows(baseline[sec], metric),
+                              _rows(current[sec], metric),
+                              args.threshold, args.absolute,
+                              ref_threshold=args.ref_threshold,
+                              reference=reference, metric=metric)
     if failures:
         print(f"\nREGRESSION: {len(failures)} row(s) over threshold")
         for f in failures:

@@ -82,6 +82,15 @@ class ScoreBackend:
                            it generically (the projected query streams
                            against the K pool); X-consuming backends
                            additionally need ``stream_q``.
+      shards_heads       : the score path decomposes per-head, so a
+                           tensor-parallel serving mesh can split the
+                           paged cache pool (and the folded weights /
+                           per-head scales) over the "model" axis with
+                           one output combine at the wo projection.
+                           False for ``factored``: its rank-dh
+                           evaluation runs the K-side projection shared
+                           across query heads, so the pool stays
+                           replicated (the engine warns and falls back).
     """
     name: str = "?"
     needs_rope: bool = False
@@ -91,6 +100,7 @@ class ScoreBackend:
     uses_x_cache: bool = False
     quantized: bool = False
     supports_block_stream: bool = False
+    shards_heads: bool = True
 
     # ------------------------------------------------------------- fold
     def fold(self, sw: ScoreWeights) -> ScoreWeights:
@@ -343,6 +353,7 @@ class FactoredBackend(ScoreBackend):
     QK^T without positional rotation). Used when D >> dh makes the
     explicit fold FLOPs-prohibitive; mathematically identical scores."""
     uses_x_cache = True
+    shards_heads = False        # shared K-side projection across heads
 
     def scores(self, x_q, x_kv, sw, *, scale, rope_fn=None):
         return wqk_mod.factored_scores(
@@ -375,6 +386,7 @@ class ScorePlan:
     block_m: int                    # KV block for the flash schedule
     cache_mode: str                 # kv | xv | x  (decode-cache layout)
     decode_schedule: str = "gather"  # paged decode: stream | gather
+    shards_heads: bool = True       # TP mesh may split pool/weights by head
     reason: str = ""                # why the planner picked this
 
     @property
@@ -473,4 +485,5 @@ def plan(cfg, *, seq_len: Optional[int] = None,
     return ScorePlan(backend=be, blockwise=blockwise,
                      block_m=getattr(cfg, "attn_block_m", 1024),
                      cache_mode=_cache_mode(cfg, be),
-                     decode_schedule=sched, reason=reason)
+                     decode_schedule=sched,
+                     shards_heads=be.shards_heads, reason=reason)

@@ -26,6 +26,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def parse_mesh(spec: str):
+    """Serving-mesh spec 'DxM' -> a ("data", "model") mesh.
+
+    '1x4' = 4-way tensor parallelism; '1x1' = the degenerate host mesh
+    (numerically identical to mesh=None). Raises with the XLA_FLAGS
+    recipe when the host exposes fewer devices than the spec needs
+    (forced host devices must be configured before jax initializes).
+    """
+    parts = spec.lower().replace("×", "x").split("x")
+    if len(parts) != 2:
+        raise ValueError(f"mesh spec {spec!r}: expected 'DxM', e.g. '1x4'")
+    d, m = (int(p) for p in parts)
+    if d < 1 or m < 1:
+        raise ValueError(f"mesh spec {spec!r}: axes must be >= 1")
+    have = len(jax.devices())
+    if d * m > have:
+        raise ValueError(
+            f"mesh {spec} needs {d * m} devices but only {have} visible; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={d * m} "
+            f"before launching (must precede jax import)")
+    return make_mesh((d, m), ("data", "model"))
+
+
 def make_host_mesh():
     """Degenerate 1x1 mesh on the local device (smoke tests, examples)."""
     return make_mesh((1, 1), ("data", "model"))

@@ -70,6 +70,15 @@ def main():
                          "exit (tick cost ~ actual length); 'gather' = "
                          "dense logical view (parity oracle); 'auto' "
                          "follows the score planner")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="tensor-parallel serving mesh, e.g. '1x4' "
+                         "(data x model axes). Params shard with the "
+                         "training rules and the paged pool shards "
+                         "head-wise over the model axis; --hbm-budget "
+                         "then reads as a PER-DEVICE budget. Needs "
+                         "DxM visible devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N "
+                         "before launching")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for all requests "
                          "(0 = greedy; >0 = categorical, seeded)")
@@ -99,12 +108,20 @@ def main():
             print(f"[serve] restored step {step}")
 
     hbm = parse_bytes(args.hbm_budget) if args.hbm_budget else None
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh
+        mesh = parse_mesh(args.mesh)
+        print(f"[serve] mesh {args.mesh}: data={mesh.shape['data']} x "
+              f"model={mesh.shape['model']} over "
+              f"{mesh.devices.size} device(s)")
     eng = Engine(model, params, max_slots=args.slots,
                  max_len=args.max_len, paged=args.paged,
                  block_size=args.block_size, hbm_bytes=hbm,
                  prefill_chunk=args.prefill_chunk,
                  prefix_sharing=not args.no_prefix_sharing,
                  decode_schedule=args.decode_schedule,
+                 mesh=mesh,
                  capture_trace=args.sim_trace is not None)
     if eng.plan is not None:
         budget = kvcache.budget_for(cfg)
@@ -122,6 +139,11 @@ def main():
               f"C={eng.prefill_chunk}; prefix sharing "
               f"{'on' if eng.prefix_sharing else 'off'}; decode "
               f"schedule {eng.decode_schedule!r}")
+        if mesh is not None:
+            print(f"[serve] pool "
+                  f"{'head-sharded' if eng.pool_sharded else 'replicated'}"
+                  f" on the model axis; "
+                  f"{eng.pool_bytes_per_device():,} B/device")
     else:
         print("[serve] dense cache pool "
               f"[{args.slots} slots x {args.max_len} tokens]")

@@ -410,6 +410,8 @@ def _decode_attend(p: dict, x_new: jax.Array, q, view: KVCache,
     ag = a.reshape(B, Hkv, H // Hkv, n, S)
     o = jnp.einsum("bgrns,bsge->bgrne", ag,
                    v_src.astype(dt)).reshape(B, H, n, dh)
+    from repro.sharding import act
+    o = act.constrain_heads(o)      # TP: one combine, at the wo einsum
     return jnp.einsum("bhne,hed->bnd", o, p["wo"].astype(dt))
 
 
@@ -450,6 +452,8 @@ def _decode_attend_streamed(p: dict, x_new: jax.Array, q, pool: KVCache,
                              wv=p["wv"].astype(jnp.float32),
                              bv=None if "bv" not in p else
                              p["bv"].astype(jnp.float32), **common)
+    from repro.sharding import act
+    o = act.constrain_heads(o)      # TP: one combine, at the wo einsum
     return jnp.einsum("bhne,hed->bnd", o.astype(dt), p["wo"].astype(dt))
 
 

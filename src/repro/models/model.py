@@ -296,19 +296,30 @@ class Model:
         return bool(cfg.num_heads) and cfg.family not in ("ssm", "hybrid") \
             and not cfg.enc_dec
 
-    def init_paged_cache(self, num_blocks: int, block_size: int):
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         mesh=None):
         """Block-pool decode cache: the per-layer KVCache with the batch
         axis as physical block id and the seq axis as in-block offset —
         leaves (L, NB, BS, ...). Layout (kv/xv/x, int8) is identical to
-        the dense cache, so paging is layout-agnostic."""
+        the dense cache, so paging is layout-agnostic.
+
+        mesh: optional serving mesh — the pool is laid out head-sharded
+        over the "model" axis (sharding/specs.paged_pool_shardings) so
+        each device holds only its head-slice of every block. None (the
+        default) keeps the single-device layout bit-for-bit."""
         if not self.supports_paged():
             raise ValueError(
                 f"paged cache unsupported for family {self.cfg.family!r}")
         cfg = self.cfg
         dt = _dtype(cfg)
-        return {"attn": _stack_pytrees(
+        pool = {"attn": _stack_pytrees(
             [attn.init_kv_cache(cfg, num_blocks, block_size, dt)
              for _ in range(cfg.num_layers)])}
+        if mesh is not None:
+            from repro.sharding import specs
+            pool = jax.device_put(pool,
+                                  specs.paged_pool_shardings(pool, mesh))
+        return pool
 
     def decode_paged(self, p, cache, tables, tokens, pos,
                      blocks_used=None):

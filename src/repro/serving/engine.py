@@ -46,17 +46,47 @@ shapes (logical + schedule-padded) and exact bit-sparsity tallies into
 ``engine.trace`` for replay through the cycle-level CIM macro
 simulator (``launch/simulate.py``). The hook is pure host-side integer
 bookkeeping behind an ``if`` — the jitted serving path is untouched.
+
+**Tensor-parallel serving** (``mesh=``): pass a ``("data", "model")``
+mesh (``launch/mesh.parse_mesh("1x4")``) and the engine goes
+mesh-native — exactly the paper's scale-out story (weights stay
+resident per macro; only raw inputs stream):
+
+  * params shard with the training rules (``sharding/specs.spec_for``:
+    heads over "model" for wq/wk/wv, the folded W_QK per head);
+  * the paged block pool shards head-wise over "model"
+    (``specs.paged_pool_shardings``) — each device holds only its
+    head-slice of every block, so a pod's aggregate HBM backs the pool
+    while ``hbm_bytes`` is read as a PER-DEVICE budget
+    (``PagedCacheBudget.max_blocks(hbm, mesh)``);
+  * block tables, ``blocks_used``, tokens and positions replicate, so
+    the allocator, copy-on-write prefix sharing and eviction run
+    unchanged host-side;
+  * prefill chunks and decode ticks run the same jitted graphs under
+    ``NamedSharding``; per-head attention partials are pinned to their
+    shard (``sharding/act.constrain_heads``) so the only TP collective
+    per tick is the one combine at the wo projection.
+
+Backends whose score path cannot split by head (``plan.shards_heads``
+False, e.g. ``factored``'s shared K projection) fall back to a
+replicated pool with a warning instead of crashing. ``mesh=None`` (the
+default) touches none of this — outputs are bit-identical to the
+single-device engine; a degenerate 1x1 mesh runs the mesh code path
+with identical numerics.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.serving import paged as paged_lib
+from repro.sharding import act
 
 
 @dataclasses.dataclass
@@ -88,6 +118,7 @@ class Engine:
                  prefill_chunk: Optional[int] = None,
                  prefix_sharing: bool = True,
                  decode_schedule: str = "auto",
+                 mesh=None,
                  capture_trace: bool = False):
         self.model, self.params = model, params
         self.max_slots, self.max_len = max_slots, max_len
@@ -98,6 +129,27 @@ class Engine:
         if getattr(cfg, "num_heads", 0):
             from repro.core import score_backend as sb
             self.plan = sb.plan(cfg, seq_len=max_len)
+
+        # tensor-parallel serving mesh: params shard with the training
+        # rules; everything the host-side scheduler touches replicates
+        self.mesh = mesh
+        self._rep = None
+        self._shard_pool = False
+        if mesh is not None:
+            from repro.sharding import specs
+            self._rep = NamedSharding(mesh, P())
+            self._shard_pool = ("model" in mesh.axis_names
+                                and mesh.shape["model"] > 1)
+            if self._shard_pool and self.plan is not None \
+                    and not self.plan.shards_heads:
+                warnings.warn(
+                    f"score backend {self.plan.backend.name!r} cannot "
+                    f"shard heads (shared K-side projection); the paged "
+                    f"pool stays replicated on the "
+                    f"{mesh.shape['model']}-way model axis")
+                self._shard_pool = False
+            self.params = jax.device_put(
+                params, specs.param_shardings(params, mesh))
         if paged and not model.supports_paged():
             raise ValueError(
                 f"paged cache unsupported for family {cfg.family!r}")
@@ -129,9 +181,12 @@ class Engine:
             self.blocks_per_seq = paged_lib.blocks_for(max_len, block_size)
             if num_blocks is None:
                 if hbm_bytes is not None:
+                    # per-DEVICE budget: a sharded pool buys shard-factor
+                    # times the blocks at the same bytes per device
                     from repro.serving.kvcache import paged_budget_for
                     num_blocks = paged_budget_for(
-                        cfg, block_size).max_blocks(hbm_bytes)
+                        cfg, block_size).max_blocks(
+                            hbm_bytes, mesh if self._shard_pool else None)
                 else:
                     # default: dense-pool-equivalent capacity (+ null)
                     num_blocks = max_slots * self.blocks_per_seq + 1
@@ -145,16 +200,31 @@ class Engine:
             planned = self.plan.decode_schedule if self.plan else "gather"
             self.decode_schedule = planned if decode_schedule == "auto" \
                 else decode_schedule
-            self.pool = model.init_paged_cache(num_blocks, block_size)
+            self.pool = model.init_paged_cache(
+                num_blocks, block_size,
+                mesh=mesh if self._shard_pool else None)
+            if mesh is not None and not self._shard_pool:
+                self.pool = jax.device_put(self.pool, self._rep)
             self.tables = np.zeros((max_slots, self.blocks_per_seq),
                                    np.int32)
             self._tables_dev = None        # device copy, refreshed lazily
             self.seq_blocks: List[Optional[paged_lib.SeqBlocks]] = \
                 [None] * max_slots
-            self._decode_paged = jax.jit(model.decode_paged)
+            if mesh is None:
+                self._decode_paged = jax.jit(model.decode_paged)
+            else:
+                # pin the outputs: logits replicate (host samples them),
+                # the pool keeps its shard layout across ticks
+                pool_sh = jax.tree_util.tree_map(lambda l: l.sharding,
+                                                 self.pool)
+                self._decode_paged = jax.jit(
+                    model.decode_paged,
+                    out_shardings=(self._rep, pool_sh))
         else:
             self.decode_schedule = "gather"      # dense pool: no paging
             self.cache = model.init_cache(max_slots, max_len)
+            if mesh is not None:
+                self.cache = jax.device_put(self.cache, self._rep)
             self._decode = jax.jit(model.decode_step)
             self._prefills: Dict[int, Callable] = {}
 
@@ -169,6 +239,32 @@ class Engine:
                 model, params, decode_schedule=self.decode_schedule,
                 block_size=self.block_size if self.paged else 0,
                 max_len=max_len)
+
+    # ------------------------------------------------------------- mesh
+    def _dev(self, arr):
+        """Host operand upload: replicated across the mesh (tables,
+        tokens, positions, blocks_used — everything the host scheduler
+        owns), a plain device array otherwise."""
+        a = jnp.asarray(arr)
+        return a if self.mesh is None else jax.device_put(a, self._rep)
+
+    def _mesh_ctx(self):
+        """Install the serving mesh for trace time so the activation
+        constraints (sharding/act) see it; identity when mesh=None."""
+        return act.use_mesh(self.mesh)
+
+    @property
+    def pool_sharded(self) -> bool:
+        """Whether the decode-cache pool is split over the mesh's
+        "model" axis (False for mesh=None, 1x1 meshes, and the
+        replicated fallback of head-unsplittable backends)."""
+        return self._shard_pool
+
+    def pool_bytes_per_device(self) -> int:
+        """Decode-cache bytes held by one device — num_blocks' worth
+        split by the pool-shard factor when the pool is head-sharded."""
+        src = self.pool if self.paged else self.cache
+        return paged_lib.pool_device_bytes(src)
 
     # ---------------------------------------------------------- admission
     def _free_slot(self) -> Optional[int]:
@@ -224,14 +320,15 @@ class Engine:
         b = _bucket(plen)
         toks = np.zeros((1, b), np.int32)
         toks[0, :plen] = req.tokens
-        batch = {"tokens": jnp.asarray(toks),
-                 "lengths": jnp.asarray([plen], np.int32)}
+        batch = {"tokens": self._dev(toks),
+                 "lengths": self._dev(np.asarray([plen], np.int32))}
         cfg = self.model.cfg
         if cfg.enc_dec:
             # audio request: tokens are the decoder prompt; encoder side
             # comes from the stub frontend embeddings attached to req
-            batch["enc_embeds"] = jnp.asarray(req.enc_embeds)  # type: ignore
-        logits, cache1 = self._prefill_fn(b)(self.params, batch)
+            batch["enc_embeds"] = self._dev(req.enc_embeds)  # type: ignore
+        with self._mesh_ctx():
+            logits, cache1 = self._prefill_fn(b)(self.params, batch)
         if self.trace is not None:
             # dense prefill sweeps the full bucketed self-attention
             self.trace.record("prefill", req.tokens, req.tokens,
@@ -310,17 +407,18 @@ class Engine:
         # block-aligned ``start`` onward touch only exclusively-owned
         # blocks; padding past the table lands in the null block.
         C = self.prefill_chunk
-        trow = jnp.asarray(self.tables[slot:slot + 1])
+        trow = self._dev(self.tables[slot:slot + 1])
         start = n_shared * BS
         logits = None
         for c0 in range(start, plen, C):
             chunk = req.tokens[c0:c0 + C]
             buf = np.zeros((1, C), np.int32)
             buf[0, :len(chunk)] = chunk
-            logits, self.pool = self._decode_paged(
-                self.params, self.pool, trow, jnp.asarray(buf),
-                jnp.asarray([c0], np.int32),
-                self._blocks_used(np.asarray([c0 + C - 1])))
+            with self._mesh_ctx():
+                logits, self.pool = self._decode_paged(
+                    self.params, self.pool, trow, self._dev(buf),
+                    self._dev(np.asarray([c0], np.int32)),
+                    self._blocks_used(np.asarray([c0 + C - 1])))
             if self.trace is not None:
                 # queries: this chunk; keys: every position the graph
                 # scores it against (the schedule covers the padded
@@ -369,8 +467,8 @@ class Engine:
         if self.decode_schedule != "stream":
             return None
         used = last_pos // self.block_size + 1
-        return jnp.asarray(np.clip(used, 1, self.blocks_per_seq),
-                           np.int32)
+        return self._dev(np.clip(used, 1, self.blocks_per_seq)
+                         .astype(np.int32))
 
     def _sample(self, logits, temps) -> np.ndarray:
         """Next token per row: greedy where ``temps[i] == 0``, else
@@ -399,20 +497,22 @@ class Engine:
                 self.trace.record(
                     "decode", toks_all[-1:], toks_all,
                     n_kv_sched=self._sched_rows(int(self.pos[s])))
-        toks = jnp.asarray(self.last_tok)
-        pos = jnp.asarray(self.pos)
+        toks = self._dev(self.last_tok)
+        pos = self._dev(self.pos)
         if self.paged:
             # tables only change at admit/evict — reuse the device copy
             # across decode ticks instead of re-uploading every step
             if self._tables_dev is None:
-                self._tables_dev = jnp.asarray(self.tables)
-            logits, self.pool = self._decode_paged(
-                self.params, self.pool, self._tables_dev,
-                toks[:, None], pos, self._blocks_used(self.pos))
+                self._tables_dev = self._dev(self.tables)
+            with self._mesh_ctx():
+                logits, self.pool = self._decode_paged(
+                    self.params, self.pool, self._tables_dev,
+                    toks[:, None], pos, self._blocks_used(self.pos))
             logits = logits[:, 0]
         else:
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              toks, pos)
+            with self._mesh_ctx():
+                logits, self.cache = self._decode(self.params, self.cache,
+                                                  toks, pos)
         nxt = self._sample(logits, [0.0 if r is None else r.temperature
                                     for r in self.slot_req])
         self.ticks += 1

@@ -49,21 +49,72 @@ class PagedCacheBudget(CacheBudget):
     whose *actual* length fits — the allocator realizes the
     bytes-per-token argument this module has always modelled. X-cache
     layouts shrink ``bytes_per_block`` by the same 2·Hkv·dh/D factor as
-    the dense rows (DESIGN.md §7)."""
+    the dense rows (DESIGN.md §7).
+
+    On a tensor-parallel serving mesh the pool is head-sharded over the
+    "model" axis (sharding/specs.paged_pool_shardings), so the budget is
+    *per device*: ``max_blocks(hbm, mesh)`` multiplies capacity by the
+    pool-shard factor. ``components`` carries the per-token-layer byte
+    rows alongside the dim extent whose divisibility governs whether
+    that row actually splits (Hkv for K/V rows, D for X rows, 0 for
+    never-sharded scale rows) — the same elasticity rule as the specs."""
     block_size: int = 16
+    # ((bytes_per_token_layer, shard_dim_extents), ...): a component
+    # splits when ANY of its candidate extents divides the shard count
+    # (Hkv first, head-dim fallback — mirroring paged_pool_shardings).
+    # Empty = one unsharded component of bytes_per_token_layer.
+    components: tuple = ()
 
     @property
     def bytes_per_block(self) -> int:
         return self.bytes_per_token * self.block_size
 
-    def max_blocks(self, hbm_bytes: int) -> int:
-        """Physical blocks an HBM budget buys (the paged pool's NB;
-        one of them is the engine's reserved null block)."""
-        return hbm_bytes // max(self.bytes_per_block, 1)
+    @staticmethod
+    def pool_shards(mesh) -> int:
+        """Ways the pool splits over the mesh's "model" axis. Accepts a
+        Mesh, a plain int shard count, or None (no sharding)."""
+        if mesh is None:
+            return 1
+        if isinstance(mesh, int):
+            return max(mesh, 1)
+        return mesh.shape["model"] if "model" in mesh.axis_names else 1
 
-    def max_tokens(self, hbm_bytes: int) -> int:
+    def per_device_bytes_per_block(self, mesh=None) -> int:
+        """One block's bytes on ONE device of a ``mesh``-sharded pool.
+        Components whose shard dim doesn't divide the model axis stay
+        replicated (paged_pool_shardings drops them the same way)."""
+        shards = self.pool_shards(mesh)
+        comps = self.components or ((self.bytes_per_token_layer, ()),)
+        per_tok = 0
+        for row_bytes, exts in comps:
+            s = shards if shards > 1 and any(
+                e and e % shards == 0 for e in exts) else 1
+            per_tok += -(-row_bytes // s)
+        return per_tok * self.layers * self.block_size
+
+    def max_blocks(self, hbm_bytes: int, mesh=None) -> int:
+        """Physical blocks a PER-DEVICE HBM budget buys (the paged
+        pool's NB; one of them is the engine's reserved null block).
+        With a mesh, each device holds only its pool shard, so the same
+        per-device budget buys up to pool-shard-factor times as many
+        blocks — the aggregate-HBM scaling claim, made concrete."""
+        return hbm_bytes // max(self.per_device_bytes_per_block(mesh), 1)
+
+    def max_tokens(self, hbm_bytes: int, mesh=None) -> int:
         """Usable cached tokens: whole blocks only."""
-        return self.max_blocks(hbm_bytes) * self.block_size
+        return self.max_blocks(hbm_bytes, mesh) * self.block_size
+
+
+def _layout_components(cfg, mode: str, dtype_bytes: int) -> tuple:
+    """(bytes_per_token_layer, shard_dim_extents) rows for a cache
+    layout — totals mirror ScoreBackend.memory_bytes_per_token; the
+    extents mirror specs.paged_pool_shardings (head axis, then the
+    head-dim fallback)."""
+    Hkv, dh, D = cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    kv = (2 * Hkv * dh * dtype_bytes, (Hkv, dh))  # K and V rows
+    v = (Hkv * dh * dtype_bytes, (Hkv, dh))       # V rows only
+    x = (D * dtype_bytes, (D,))                   # raw-X rows
+    return {"kv": (kv,), "x": (x,), "xv": (x, v)}[mode]
 
 
 def paged_budget_for(cfg, block_size: int = 16,
@@ -71,8 +122,10 @@ def paged_budget_for(cfg, block_size: int = 16,
     """Block-table sizing for cfg — same planned backend/layout as
     ``budget_for``, quantized to ``block_size``-token blocks."""
     b = budget_for(cfg, dtype_bytes)
-    return PagedCacheBudget(block_size=block_size,
-                            **dataclasses.asdict(b))
+    return PagedCacheBudget(
+        block_size=block_size,
+        components=_layout_components(cfg, b.mode, dtype_bytes),
+        **dataclasses.asdict(b))
 
 
 def budget_for(cfg, dtype_bytes: int = 2) -> CacheBudget:

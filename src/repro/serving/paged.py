@@ -136,6 +136,25 @@ class BlockAllocator:
         return fresh[0]
 
 
+def pool_device_bytes(pool, device=None) -> int:
+    """Bytes of the block pool resident on ONE device — the quantity
+    the mesh-sharded engine's per-device HBM claim is about. For a
+    sharded pool this sums the shards addressable on ``device`` (default:
+    the first device holding any shard); unsharded pools report their
+    full size."""
+    import jax
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(pool):
+        shards = getattr(leaf, "addressable_shards", None)
+        if not shards:
+            total += leaf.size * leaf.dtype.itemsize
+            continue
+        dev = device or shards[0].device
+        total += sum(s.data.size * s.data.dtype.itemsize
+                     for s in shards if s.device == dev)
+    return total
+
+
 @dataclasses.dataclass
 class SeqBlocks:
     """One sequence's block-table row: logical order, index i covers

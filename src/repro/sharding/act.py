@@ -120,6 +120,22 @@ def constrain_moe_dispatched(x):
     return _apply(x, spec)
 
 
+def constrain_heads(x):
+    """Per-head decode attention partials (B, H, n, dh): heads over
+    model. Pinning the head axis keeps each device's score/AV work on
+    its own head-slice of the paged pool, so the only TP communication
+    in a decode tick is the single combine of per-head partial outputs
+    at the wo projection (GSPMD inserts it from wo's H-sharded spec)."""
+    def spec(mesh, shape):
+        if len(shape) != 4:
+            return None
+        msz = mesh.shape["model"]
+        if shape[1] % msz != 0 or shape[1] < msz:
+            return None
+        return P(None, "model")
+    return _apply(x, spec)
+
+
 def constrain_grouped_q(x):
     """Grouped attention q (B, G, R, N, E): batch over (pod,data), q-ROW
     dim N over model. Row-parallel attention is head-count agnostic —

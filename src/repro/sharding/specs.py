@@ -150,6 +150,44 @@ def data_shardings(batch_tree, mesh: Mesh, seq_shard: bool = False):
     return jax.tree_util.tree_map(one, batch_tree)
 
 
+def paged_pool_shardings(pool_tree, mesh: Mesh):
+    """Head-slice shardings for the serving engine's paged block pool.
+
+    Pool leaves are ``(L, NB, BS, ...)`` — layer stack x physical block
+    x in-block offset, all replicated (every device must reach every
+    block id through the replicated tables). The trailing dims shard:
+
+      * K/V rows ``(L, NB, BS, Hkv, dh)`` and their int8 scales
+        ``(L, NB, BS, Hkv, 1)``: the head axis splits over "model" —
+        each device holds only its head-slice of every block. When Hkv
+        doesn't divide (GQA on a wide axis), the head-DIM axis is tried
+        next — the same fallback ``spec_for`` applies to wk/wv, keeping
+        pool and projection shardings aligned.
+      * X rows ``(L, NB, BS, D)`` (the paper's raw-input cache): D
+        splits over "model" — storage shards even though every head
+        consumes full rows; GSPMD re-streams X per tick, which is the
+        paper's dataflow (only raw inputs move, weights stay put).
+      * per-token X scales ``(L, NB, BS, 1)``: replicated.
+
+    Any dim that doesn't divide the model axis drops to replication
+    (same elasticity rule as ``spec_for``).
+    """
+    msz = _axis_size(mesh, "model")
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        for ax in (3, 4):              # Hkv-or-D first, then dh
+            if ax < len(shape) and shape[ax] % msz == 0 \
+                    and shape[ax] >= msz:
+                spec[ax] = "model"
+                break
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, pool_tree)
+
+
 def cache_shardings(cache_tree, mesh: Mesh, batch: int):
     """Decode-cache shardings.
 

@@ -1,8 +1,38 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real
-1-device CPU host (the 512-device override belongs ONLY to dryrun.py)."""
+1-device CPU host (the 512-device override belongs ONLY to dryrun.py).
+
+Tests that need a multi-device view spawn a SUBPROCESS with the env
+built by ``forced_devices_env`` below; the autouse guard fails any test
+that mutates XLA_FLAGS in-process, because under pytest-xdist the
+sibling tests sharing that worker would silently inherit (or silently
+miss — jax is already initialized) the override.
+"""
+import os
+
 import jax
 import numpy as np
 import pytest
+
+
+def forced_devices_env(num_devices=None):
+    """Subprocess env for tests that force a host device count. The
+    override must be set BEFORE the child's jax import and must never
+    touch this (possibly xdist-worker) process's environment."""
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    if num_devices:
+        env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                            f"{num_devices}")
+    return env
+
+
+@pytest.fixture(autouse=True)
+def _xla_flags_stay_put():
+    """Guard: in-process XLA_FLAGS mutation breaks xdist workers."""
+    before = os.environ.get("XLA_FLAGS")
+    yield
+    assert os.environ.get("XLA_FLAGS") == before, (
+        "test mutated XLA_FLAGS in-process; use "
+        "conftest.forced_devices_env + a subprocess instead")
 
 
 @pytest.fixture(scope="session")

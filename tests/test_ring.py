@@ -1,14 +1,15 @@
 """Ring attention (shard_map + ppermute) vs single-device oracle.
 
-Runs in a subprocess with 4 CPU devices so the device-count override
-never leaks into the suite.
+Runs in a subprocess with 4 CPU devices (env built by
+conftest.forced_devices_env) so the device-count override never leaks
+into the suite — or, under pytest-xdist, into a sibling worker test.
 """
 import subprocess
 import sys
 
+from conftest import forced_devices_env
+
 _SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh
 from repro.sharding.ring import ring_attention, ring_attention_wqk
@@ -56,5 +57,5 @@ print("RING_OK")
 def test_ring_attention_subprocess():
     r = subprocess.run([sys.executable, "-c", _SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env=forced_devices_env(4))
     assert "RING_OK" in r.stdout, r.stdout + r.stderr

@@ -1,9 +1,10 @@
 """Sharding rules: divisibility fallback, elasticity over mesh shapes,
 and a real sharded train step on a multi-device CPU mesh.
 
-This file spawns a SUBPROCESS for the multi-device part so the main
-pytest process keeps its 1-device view (dryrun.py owns the 512-device
-override).
+This file spawns a SUBPROCESS for the multi-device part (env built by
+conftest.forced_devices_env) so the main pytest process — and, under
+pytest-xdist, its sibling worker tests — keeps its 1-device view
+(dryrun.py owns the 512-device override).
 """
 import subprocess
 import sys
@@ -13,6 +14,7 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
+from conftest import forced_devices_env
 from repro.configs.base import get_arch, reduced
 from repro.models.model import build_model
 from repro.sharding import specs
@@ -99,8 +101,6 @@ def test_param_shardings_on_tree():
 
 
 _MULTIDEV_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs.base import get_arch, reduced
 from repro.data.pipeline import DataConfig, make_batch
@@ -131,5 +131,5 @@ def test_sharded_train_step_multidevice():
     so this test's device-count override can't leak into the suite)."""
     r = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
                        capture_output=True, text=True, timeout=900,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env=forced_devices_env(8))
     assert "MULTIDEV_OK" in r.stdout, r.stdout + r.stderr
