@@ -151,7 +151,7 @@ def _logits_parity(model, params, schedule="gather") -> float:
                                      max_len=MAX_LEN, block_size=BLOCK,
                                      chunk=2 * BLOCK, steps=MAX_NEW - 1,
                                      schedule=schedule)
-    return max(float(np.max(np.abs(a - b))) for a, b in zip(ref, got))
+    return max(float(np.max(np.abs(a - b))) for a, b in zip(ref, got, strict=True))
 
 
 def bench_layout(name: str, over: dict) -> dict:

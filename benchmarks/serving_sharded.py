@@ -34,6 +34,8 @@ import os
 if __name__ == "__main__" and \
         "--xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", ""):
+    # ra: allow[RA103] __main__-guarded, precedes the jax import below;
+    # importing the module (benchmarks.run) never reaches this branch
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_force_host_platform_device_count=4"
                                ).strip()
@@ -121,7 +123,7 @@ def run_pair(model, params, mesh, *, num_blocks=None, hbm_bytes=None,
     ldiff = 0.0
     logits_ok = len(ref.logit_log) == len(got.logit_log)
     if logits_ok:
-        for a, b in zip(ref.logit_log, got.logit_log):
+        for a, b in zip(ref.logit_log, got.logit_log, strict=True):
             if a.shape != b.shape:
                 logits_ok = False
                 break

@@ -37,7 +37,6 @@ def run(report):
     for name, kind, nm, tops_w, gops_mm2 in SOTA:
         report.row(f"{name:22s} {kind:12s} {tops_w:7.2f} TOPS/W  "
                    f"-> ours/theirs = {ours28 / tops_w:4.1f}x")
-    worst = min(t for *_, t, _ in SOTA)
     report.check(">=6x energy eff vs best digital SoTA (paper: >=7x vs "
                  "CIMs, 6x vs [10])", ours28 / max(
                      t for *_, t, _ in SOTA) >= 4.0)

@@ -7,7 +7,6 @@ computation on the paper's 65 nm macro.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -11,7 +11,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs.base import get_arch, reduced
 from repro.core import score_backend as sb
@@ -36,7 +35,6 @@ def main():
           f"through the stationary weights")
 
     eng = Engine(model, params, max_slots=4, max_len=96)
-    rng = np.random.default_rng(0)
     reqs = []
     for i in range(10):
         r = Request(rid=i, tokens=[1], max_new_tokens=12, eos_id=None)

@@ -10,7 +10,6 @@ Interrupt with Ctrl-C: an emergency checkpoint is written; re-running
 resumes exactly (stateless data pipeline).
 """
 import argparse
-import dataclasses
 
 import jax
 

@@ -1,0 +1,22 @@
+"""Static analysis: machine-verified structural claims + JAX-footgun lint.
+
+Three layers, one CI gate (``python -m repro.analysis``):
+
+  * ``repro.analysis.invariants`` — jaxpr/HLO invariant checker: the
+    one-TP-collective attention claim, pinned tick collective
+    signatures, graph stability across tick values, no host ops in the
+    tick, pinned output shardings. Traces and lowers only; nothing
+    executes.
+  * ``repro.analysis.contracts`` — Pallas/budget contract checker:
+    VMEM_D_LIMIT mirrors and derivation, BlockSpec/grid math,
+    ``PagedCacheBudget`` accounting vs ``specs.paged_pool_spec`` for
+    every (layout, quantization, mesh-extent) combination.
+  * ``repro.analysis.lint`` — pure-AST lint pass (RA101-RA106), no jax
+    import, suitable for pre-commit.
+
+DESIGN.md §11 lists every checked invariant and how to add one.
+
+This package intentionally imports nothing at the top level: the lint
+layer must stay importable without jax, and the invariant layer must be
+importable before jax initializes (forced-device subprocess).
+"""

@@ -1,0 +1,57 @@
+"""``python -m repro.analysis`` — run all three static-analysis layers.
+
+Order: lint (pure AST, milliseconds) -> contracts (imports jax, no
+devices) -> invariants (subprocess with forced host devices, so the
+meshed checks see a real 1x4 mesh without mutating THIS process's
+XLA_FLAGS — same idiom as tests/conftest.forced_devices_env).
+
+Exit code 0 iff every layer passes. Any violation fails the build.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from repro.analysis import contracts, invariants, lint
+
+
+def main(argv=None) -> int:
+    failed = []
+
+    print("=== repro.analysis: lint ===")
+    lint_findings = lint.check_paths()
+    for f in lint_findings:
+        print(f)
+    print(f"[lint] {len(lint_findings)} finding(s)")
+    if lint_findings:
+        failed.append("lint")
+
+    print("=== repro.analysis: contracts ===")
+    contract_violations = contracts.run_all()
+    for v in contract_violations:
+        print(f"VIOLATION: {v}")
+    if contract_violations:
+        failed.append("contracts")
+
+    print("=== repro.analysis: invariants (forced-device subprocess) ===")
+    n = invariants.MESH_SHAPE[0] * invariants.MESH_SHAPE[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env.setdefault("PYTHONPATH", os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.invariants"], env=env)
+    if proc.returncode != 0:
+        failed.append("invariants")
+
+    if failed:
+        print(f"repro.analysis: FAILED ({', '.join(failed)})")
+        return 1
+    print("repro.analysis: all layers clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

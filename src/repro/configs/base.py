@@ -7,8 +7,7 @@ trainer, server and benchmarks all consume these.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence
+from dataclasses import dataclass
 
 # ---------------------------------------------------------------------------
 # Score backends: the paper's technique as a first-class feature.
@@ -67,18 +66,18 @@ class ModelConfig:
     act: str = "swiglu"              # swiglu | gelu
     tie_embeddings: bool = False
     # attention pattern
-    sliding_window: Optional[int] = None      # SWA for all attn layers
-    local_global_ratio: Optional[int] = None  # gemma3: N local per 1 global
+    sliding_window: int | None = None      # SWA for all attn layers
+    local_global_ratio: int | None = None  # gemma3: N local per 1 global
     local_window: int = 1024
     # hybrid (jamba): 1 attention layer per `attn_every` layers, rest SSM
-    attn_every: Optional[int] = None
-    moe: Optional[MoEConfig] = None
-    ssm: Optional[SSMConfig] = None
+    attn_every: int | None = None
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
     # enc-dec (whisper)
     enc_dec: bool = False
     num_enc_layers: int = 0
     # modality frontend stub: inputs are precomputed embeddings of this dim
-    frontend: Optional[str] = None   # None | audio | vision
+    frontend: str | None = None   # None | audio | vision
     # --- paper technique ---
     score_mode: str = "standard"     # ScoreBackend registry name
     wqk_explicit: bool = True        # explicit DxD W_QK (paper); False lets
@@ -86,22 +85,22 @@ class ModelConfig:
     # decode-cache mode override: None = auto (kv for standard scores;
     # pure-x when D < 2*Hkv*dh else xv). 'x' trades V-recompute flops for
     # halved cache; crossover measured in EXPERIMENTS.md §Perf (C).
-    cache_mode: Optional[str] = None  # None | kv | xv | x
+    cache_mode: str | None = None  # None | kv | xv | x
     # int8 X-cache (beyond-paper, paper-aligned): the macro streams 8-bit
     # inputs, so store the raw-X cache in exactly that format — int8 with
     # per-token scales. Halves X-cache HBM again; for wqk_int8 scores the
     # quantization is the SAME one the score path applies, so accuracy
     # cost is ~zero. Applies to wqk*/x-carrying cache modes only.
-    cache_quant: Optional[str] = None  # None | int8
+    cache_quant: str | None = None  # None | int8
     # paged-decode schedule override: None = auto (block-streamed online
     # softmax with used-length early exit when the planned backend
     # supports it; see kernels/paged_attention). 'gather' forces the
     # dense gather_block_view path (the parity oracle).
-    decode_schedule: Optional[str] = None  # None | stream | gather
+    decode_schedule: str | None = None  # None | stream | gather
     # --- numerics / training ---
     dtype: str = "bfloat16"
     remat: str = "block"             # none | block | full
-    logit_softcap: Optional[float] = None
+    logit_softcap: float | None = None
     # blockwise online-softmax attention (flash schedule with custom-VJP
     # backward) for KV lengths >= this; shorter sequences keep the
     # quadratic path (cheaper at small N, and the exactness oracle)
@@ -217,7 +216,7 @@ def list_archs() -> list:
     return sorted(_REGISTRY)
 
 
-def cells(arch: Optional[str] = None):
+def cells(arch: str | None = None):
     """All valid (arch, shape) dry-run cells per the assignment rules."""
     _ensure_loaded()
     out = []

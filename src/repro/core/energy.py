@@ -13,7 +13,6 @@ Macro spec (65 nm, 1.0 V, 100 MHz):
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 

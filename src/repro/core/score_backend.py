@@ -35,7 +35,8 @@ arithmetic on these backends.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
+from typing import NamedTuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -53,9 +54,9 @@ class ScoreWeights(NamedTuple):
     """The raw score-side weights of one attention layer."""
     wq: jax.Array                       # (D, H, dh)
     wk: jax.Array                       # (D, Hkv, dh)
-    bq: Optional[jax.Array] = None      # (H, dh)
-    bk: Optional[jax.Array] = None      # (Hkv, dh)
-    wqk: Optional[jax.Array] = None     # (H, D[+1], D[+1]) pre-folded
+    bq: jax.Array | None = None      # (H, dh)
+    bk: jax.Array | None = None      # (Hkv, dh)
+    wqk: jax.Array | None = None     # (H, D[+1], D[+1]) pre-folded
 
 
 # --------------------------------------------------------------- protocol
@@ -96,7 +97,7 @@ class ScoreBackend:
     needs_rope: bool = False
     folds_bias: bool = False
     supports_blockwise: bool = True
-    max_d_aug: Optional[int] = None
+    max_d_aug: int | None = None
     uses_x_cache: bool = False
     quantized: bool = False
     supports_block_stream: bool = False
@@ -115,7 +116,7 @@ class ScoreBackend:
     # ----------------------------------------------------------- scores
     def scores(self, x_q: jax.Array, x_kv: jax.Array, sw: ScoreWeights,
                *, scale: float,
-               rope_fn: Optional[Callable] = None) -> jax.Array:
+               rope_fn: Callable | None = None) -> jax.Array:
         """-> (..., H, Nq, Nk) f32 scores, already scaled by ``scale``.
 
         x_q (..., Nq, D), x_kv (..., Nk, D): *raw* layer inputs
@@ -124,9 +125,9 @@ class ScoreBackend:
 
     def blockwise_qk(self, sw: ScoreWeights, x_q: jax.Array,
                      x_kv: jax.Array, *, dtype,
-                     rope_q: Optional[Callable] = None,
-                     rope_k: Optional[Callable] = None
-                     ) -> Tuple[jax.Array, jax.Array]:
+                     rope_q: Callable | None = None,
+                     rope_k: Callable | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
         """Grouped (q, k) streams for the flash schedule.
 
         x_q (B, N, D), x_kv (B, M, D) -> q (B, Gs, Rs, N, E),
@@ -153,7 +154,7 @@ class ScoreBackend:
         return self.max_d_aug is None or self.d_aug(cfg) <= self.max_d_aug
 
     def memory_bytes_per_token(self, cfg, dtype_bytes: int = 2,
-                               cache_mode: Optional[str] = None) -> int:
+                               cache_mode: str | None = None) -> int:
         """Decode-cache bytes per token per attention layer — the
         quantity the paper's weight-stationary dataflow optimizes.
         Sized from the (planned or given) cache layout."""
@@ -169,7 +170,7 @@ class ScoreBackend:
 
 # --------------------------------------------------------------- registry
 
-_BACKENDS: Dict[str, ScoreBackend] = {}
+_BACKENDS: dict[str, ScoreBackend] = {}
 
 
 def register_backend(name: str):
@@ -183,7 +184,7 @@ def register_backend(name: str):
     return deco
 
 
-def get_backend(name: Union[str, ScoreBackend]) -> ScoreBackend:
+def get_backend(name: str | ScoreBackend) -> ScoreBackend:
     if isinstance(name, ScoreBackend):
         return name
     if name not in _BACKENDS:
@@ -414,10 +415,10 @@ def _cache_mode(cfg, backend: ScoreBackend) -> str:
     return "xv"
 
 
-def plan(cfg, *, seq_len: Optional[int] = None,
+def plan(cfg, *, seq_len: int | None = None,
          mask_kind: str = "causal",
-         device: Optional[str] = None,
-         backend: Optional[Union[str, ScoreBackend]] = None) -> ScorePlan:
+         device: str | None = None,
+         backend: str | ScoreBackend | None = None) -> ScorePlan:
     """Pick backend + execution schedule for ``cfg``.
 
     seq_len   : KV length of the workload (None = unknown -> quadratic)

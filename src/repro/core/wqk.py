@@ -18,7 +18,6 @@ Shapes:  x (..., N, D); wq (D, H, dh); wk (D, Hkv, dh); wqk (H, D, D)
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +26,8 @@ from repro.core import quant
 
 
 def fold_wqk(wq: jax.Array, wk: jax.Array,
-             bq: Optional[jax.Array] = None,
-             bk: Optional[jax.Array] = None) -> jax.Array:
+             bq: jax.Array | None = None,
+             bk: jax.Array | None = None) -> jax.Array:
     """Pre-compute per-query-head W_QK (Eq. 2). f32 accumulation.
 
     wq: (D, H, dh), wk: (D, Hkv, dh), bq: (H, dh), bk: (Hkv, dh).
@@ -99,8 +98,8 @@ def wqk_scores_int8(x_q: jax.Array, x_kv: jax.Array, wqk: jax.Array,
 
 def factored_scores(x_q: jax.Array, x_kv: jax.Array,
                     wq: jax.Array, wk: jax.Array,
-                    bq: Optional[jax.Array] = None,
-                    bk: Optional[jax.Array] = None) -> jax.Array:
+                    bq: jax.Array | None = None,
+                    bk: jax.Array | None = None) -> jax.Array:
     """Rank-dh factored evaluation of the same bilinear form (== standard
     QK^T without positional rotation). Used when D >> dh makes the explicit
     fold FLOPs-prohibitive; mathematically identical scores."""

@@ -21,7 +21,7 @@ paper's argument for zero-rich embeddings).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from collections.abc import Iterator
 
 import numpy as np
 
@@ -63,7 +63,7 @@ def _doc_stream(rng: np.random.Generator, cfg: DataConfig, n_tokens: int
     return out
 
 
-def make_batch(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+def make_batch(cfg: DataConfig, step: int) -> dict[str, np.ndarray]:
     """The global batch for ``step`` — pure function of (cfg.seed, step).
 
     Returns tokens/labels (B, S) int32, loss_mask (B, S) f32,
@@ -91,8 +91,8 @@ def make_batch(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
             "lengths": lengths}
 
 
-def host_slice(batch: Dict[str, np.ndarray], host_id: int,
-               n_hosts: int) -> Dict[str, np.ndarray]:
+def host_slice(batch: dict[str, np.ndarray], host_id: int,
+               n_hosts: int) -> dict[str, np.ndarray]:
     """Rows of the global batch owned by ``host_id`` (data-parallel I/O)."""
     B = batch["tokens"].shape[0]
     assert B % n_hosts == 0, (B, n_hosts)
@@ -101,7 +101,7 @@ def host_slice(batch: Dict[str, np.ndarray], host_id: int,
     return {k: v[sl] for k, v in batch.items()}
 
 
-def pad_fraction(batch: Dict[str, np.ndarray]) -> float:
+def pad_fraction(batch: dict[str, np.ndarray]) -> float:
     """Fraction of positions that are pure zero padding (zero-skip's
     token-level component)."""
     return float(1.0 - batch["loss_mask"].mean())
@@ -117,10 +117,10 @@ class DataIterator:
         self.step = start_step
         self.host_id, self.n_hosts = host_id, n_hosts
 
-    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         return self
 
-    def __next__(self) -> Dict[str, np.ndarray]:
+    def __next__(self) -> dict[str, np.ndarray]:
         b = make_batch(self.cfg, self.step)
         self.step += 1
         if self.n_hosts > 1:

@@ -7,7 +7,7 @@ an external BPE asset. Deterministic and invertible on the byte range.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -46,7 +46,7 @@ class ByteTokenizer:
         tab[ids] = np.arange(256)
         return tab
 
-    def encode(self, text: str, bos: bool = True, eos: bool = True) -> List[int]:
+    def encode(self, text: str, bos: bool = True, eos: bool = True) -> list[int]:
         b = np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int64)
         ids = self._map(b).tolist()
         return ([BOS_ID] if bos else []) + ids + ([EOS_ID] if eos else [])

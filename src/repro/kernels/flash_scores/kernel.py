@@ -21,7 +21,6 @@ zeros; the macro skips value zeros).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ wqk-mode entry point (shared raw-X K-stream across heads)."""
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the blockwise score+softmax+AV kernel."""
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,7 @@ NEG_INF = -1e30
 
 def flash_scores_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                      scale: float = 1.0, causal: bool = True,
-                     window: int = 0) -> Tuple[jax.Array, jax.Array]:
+                     window: int = 0) -> tuple[jax.Array, jax.Array]:
     """Materialized-softmax reference. Shapes as kernel.flash_scores."""
     H, N, E = q.shape
     Hk, M, dv = v.shape

@@ -25,7 +25,6 @@ the two cannot drift.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -112,11 +111,11 @@ def _kernel(tables_ref, used_ref, qpos_ref, win_ref, *refs,
 def paged_attend_pallas(q: jax.Array, k_pool: jax.Array,
                         tables: jax.Array, blocks_used: jax.Array,
                         qpos: jax.Array, *,
-                        v_pool: Optional[jax.Array] = None,
-                        k_scale: Optional[jax.Array] = None,
-                        v_scale: Optional[jax.Array] = None,
-                        wv: Optional[jax.Array] = None,
-                        bv: Optional[jax.Array] = None,
+                        v_pool: jax.Array | None = None,
+                        k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None,
+                        wv: jax.Array | None = None,
+                        bv: jax.Array | None = None,
                         scale: float = 1.0,
                         window=None,
                         softcap: float = 0.0,

@@ -16,7 +16,6 @@ parity oracle for both.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 
@@ -26,18 +25,18 @@ from repro.kernels.paged_attention import ref as _ref
 
 def paged_attend(q: jax.Array, k_pool: jax.Array, tables: jax.Array,
                  blocks_used: jax.Array, qpos: jax.Array, *,
-                 v_pool: Optional[jax.Array] = None,
-                 k_scale: Optional[jax.Array] = None,
-                 v_scale: Optional[jax.Array] = None,
-                 wv: Optional[jax.Array] = None,
-                 bv: Optional[jax.Array] = None,
+                 v_pool: jax.Array | None = None,
+                 k_scale: jax.Array | None = None,
+                 v_scale: jax.Array | None = None,
+                 wv: jax.Array | None = None,
+                 bv: jax.Array | None = None,
                  scale: float = 1.0,
                  window=None,
                  softcap: float = 0.0,
                  augment: bool = False,
                  requant: bool = False,
                  impl: str = "auto",
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """Shapes and semantics: see ``ref.paged_attend_ref``."""
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "jnp"

@@ -22,7 +22,6 @@ tolerance (and bit-equal greedy outputs).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,7 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def _dequant_rows(blk: jax.Array, scale: Optional[jax.Array]) -> jax.Array:
+def _dequant_rows(blk: jax.Array, scale: jax.Array | None) -> jax.Array:
     """(..., BS, G, E) int8/float + optional (..., BS, G, 1) scales -> f32."""
     x = blk.astype(jnp.float32)
     if scale is not None:
@@ -73,11 +72,11 @@ def _block_values(kdeq, vblk, vscale, wv, bv):
 
 def paged_attend_ref(q: jax.Array, k_pool: jax.Array, tables: jax.Array,
                      blocks_used: jax.Array, qpos: jax.Array, *,
-                     v_pool: Optional[jax.Array] = None,
-                     k_scale: Optional[jax.Array] = None,
-                     v_scale: Optional[jax.Array] = None,
-                     wv: Optional[jax.Array] = None,
-                     bv: Optional[jax.Array] = None,
+                     v_pool: jax.Array | None = None,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None,
+                     wv: jax.Array | None = None,
+                     bv: jax.Array | None = None,
                      scale: float = 1.0,
                      window=None,
                      softcap: float = 0.0,

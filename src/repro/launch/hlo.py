@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
@@ -92,8 +91,8 @@ def _wire_bytes(kind: str, bytes_: float, n: int) -> float:
     return float(bytes_)
 
 
-def _split_computations(hlo_text: str) -> Dict[str, list]:
-    comps: Dict[str, list] = {}
+def _split_computations(hlo_text: str) -> dict[str, list]:
+    comps: dict[str, list] = {}
     cur = None
     for line in hlo_text.splitlines():
         stripped = line.strip()
@@ -111,12 +110,12 @@ def _split_computations(hlo_text: str) -> Dict[str, list]:
     return comps
 
 
-def _comp_multipliers(comps: Dict[str, list]) -> Dict[str, float]:
+def _comp_multipliers(comps: dict[str, list]) -> dict[str, float]:
     """Execution-count multiplier per computation: while bodies run
     known_trip_count times PER execution of their parent computation
     (nested scans — e.g. flash k-blocks inside the layer scan — compose
     multiplicatively). Unannotated whiles default to 1 (conservative)."""
-    parent_of: Dict[str, tuple] = {}          # body -> (parent, trip)
+    parent_of: dict[str, tuple] = {}          # body -> (parent, trip)
     for cname, lines in comps.items():
         for line in lines:
             m = _WHILE_RE.search(line)
@@ -126,7 +125,7 @@ def _comp_multipliers(comps: Dict[str, list]) -> Dict[str, float]:
             trip = float(t.group(1)) if t else 1.0
             parent_of[m.group(1)] = (cname, trip)
 
-    mult: Dict[str, float] = {}
+    mult: dict[str, float] = {}
 
     def resolve(name: str, depth=0) -> float:
         if name in mult:
@@ -144,7 +143,45 @@ def _comp_multipliers(comps: Dict[str, list]) -> Dict[str, float]:
     return mult
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
+def collective_counts(hlo_text: str) -> dict[str, dict[str, int]]:
+    """Static collective-op counts per HLO computation (no trip-count
+    multipliers — each op counted once, as written). ``-start``/``-done``
+    async pairs count once (on -start). Keys are computation names;
+    values map collective kind -> op count. Used by repro.analysis to
+    pin the decode tick's collective signature (which ops, and whether
+    they sit inside the layer loop) independently of operand sizes."""
+    comps = _split_computations(hlo_text)
+    out: dict[str, dict[str, int]] = {}
+    for cname, lines in comps.items():
+        counts: dict[str, int] = {}
+        for line in lines:
+            m = _OP_RE.search(line)
+            if m is None or m.group(3) == "-done":
+                continue
+            counts[m.group(2)] = counts.get(m.group(2), 0) + 1
+        if counts:
+            out[cname] = counts
+    return out
+
+
+def loop_body_names(hlo_text: str) -> set:
+    """Names of computations that are (transitively) while-loop bodies —
+    the layer-scan bodies in a compiled step. A collective inside one of
+    these executes once per layer; outside, once per call."""
+    comps = _split_computations(hlo_text)
+    # anything reachable from a while-op body operand is loop-resident
+    parents = set()
+    for lines in comps.values():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m is not None:
+                parents.add(m.group(1))
+    # scheduled HLO inlines fusions, so direct while-body operands are
+    # sufficient; collective_bytes has the trip-count-multiplier view
+    return parents
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
     """Per-device wire bytes per collective kind over ONE step execution.
 
     Collectives inside while (scan) bodies are multiplied by the loop's
@@ -154,7 +191,7 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """
     comps = _split_computations(hlo_text)
     mults = _comp_multipliers(comps)
-    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
     for cname, lines in comps.items():
         mult = mults.get(cname, 1.0)
         for line in lines:
@@ -179,8 +216,8 @@ class Roofline:
     compute_s: float
     memory_s: float
     collective_s: float
-    model_flops: Optional[float] = None    # 6·N·D analytic, per device
-    useful_ratio: Optional[float] = None   # model_flops / flops
+    model_flops: float | None = None    # 6·N·D analytic, per device
+    useful_ratio: float | None = None   # model_flops / flops
 
     @property
     def dominant(self) -> str:
@@ -199,8 +236,8 @@ class Roofline:
         return d
 
 
-def roofline_terms(cost: dict, coll: Dict[str, int],
-                   model_flops_per_dev: Optional[float] = None) -> Roofline:
+def roofline_terms(cost: dict, coll: dict[str, int],
+                   model_flops_per_dev: float | None = None) -> Roofline:
     flops = float(cost.get("flops", 0.0) or 0.0)
     hbm = float(cost.get("bytes accessed", 0.0) or 0.0)
     cb = float(coll.get("total", 0))

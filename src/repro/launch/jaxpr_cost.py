@@ -22,9 +22,7 @@ well-fused TPU executable moves to/from HBM.
 """
 from __future__ import annotations
 
-import math
 from functools import reduce
-from typing import Any, Dict
 
 import jax
 import numpy as np
@@ -97,7 +95,7 @@ def _sub_jaxprs(eqn):
     return out
 
 
-def _walk(jaxpr, mult: float, acc: Dict[str, float]):
+def _walk(jaxpr, mult: float, acc: dict[str, float]):
     for eqn in jaxpr.eqns:
         name = eqn.primitive.name
         subs = _sub_jaxprs(eqn)
@@ -140,7 +138,7 @@ def _walk(jaxpr, mult: float, acc: Dict[str, float]):
     return acc
 
 
-def jaxpr_cost(fn, *args, **kwargs) -> Dict[str, float]:
+def jaxpr_cost(fn, *args, **kwargs) -> dict[str, float]:
     """Trace ``fn`` with abstract args and return {'flops', 'bytes'}
     (GLOBAL totals — divide by device count for per-chip terms)."""
     closed = jax.make_jaxpr(fn)(*args, **kwargs)

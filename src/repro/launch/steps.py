@@ -10,7 +10,8 @@ batched prompt-ingestion graph.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +30,7 @@ def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def train_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> Dict[str, Any]:
+def train_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> dict[str, Any]:
     B, S = shp.global_batch, shp.seq_len
     specs = {"tokens": _sds((B, S), I32),
              "labels": _sds((B, S), I32),
@@ -39,7 +40,7 @@ def train_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> Dict[str, Any]:
     return specs
 
 
-def prefill_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> Dict[str, Any]:
+def prefill_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> dict[str, Any]:
     B, S = shp.global_batch, shp.seq_len
     if cfg.enc_dec:
         # audio: encoder carries the content; decoder starts from BOS.
@@ -53,14 +54,14 @@ def prefill_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> Dict[str, Any]:
     return {"tokens": _sds((B, S), I32), "lengths": _sds((B,), I32)}
 
 
-def decode_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> Dict[str, Any]:
+def decode_input_specs(cfg: ModelConfig, shp: ShapeConfig) -> dict[str, Any]:
     B, S = shp.global_batch, shp.seq_len
     model = build_model(cfg)
     cache = jax.eval_shape(lambda: model.init_cache(B, S))
     return {"cache": cache, "token": _sds((B,), I32), "pos": _sds((B,), I32)}
 
 
-def input_specs(arch, shape) -> Dict[str, Any]:
+def input_specs(arch, shape) -> dict[str, Any]:
     """ShapeDtypeStruct stand-ins for every model input of one
     (arch × shape) cell — weak-type-correct, shardable, no allocation.
     ``arch``/``shape`` may be names or config objects."""
@@ -87,8 +88,8 @@ class Cell:
     shp: ShapeConfig
     kind: str                       # train | prefill | decode
     fn: Callable                    # (params, **inputs)
-    inputs: Dict[str, Any]          # ShapeDtypeStructs
-    donate: Tuple[int, ...] = ()
+    inputs: dict[str, Any]          # ShapeDtypeStructs
+    donate: tuple[int, ...] = ()
     tc: Any = None                  # TrainConfig for train cells
 
 

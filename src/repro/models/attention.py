@@ -12,7 +12,7 @@ Head axes shard over the "model" mesh axis; D over "data" (FSDP).
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +48,7 @@ def score_weights(p: dict) -> ScoreWeights:
 
 
 def _mask_bias(positions_q, positions_kv, kind: str,
-               window: Optional[int]) -> jax.Array:
+               window: int | None) -> jax.Array:
     """Additive mask bias (..., Nq, Nk). kind: causal|window|none."""
     if kind == "none":
         iq = positions_q[..., :, None]
@@ -76,7 +76,7 @@ def _values(p: dict, x_kv: jax.Array, H: int) -> jax.Array:
 def attention_full(p: dict, x_q: jax.Array, x_kv: jax.Array, cfg, *,
                    positions_q: jax.Array, positions_kv: jax.Array,
                    mask_kind: str = "causal",
-                   window: Optional[jax.Array] = None,
+                   window: jax.Array | None = None,
                    backend=None) -> jax.Array:
     """Full-sequence attention (training / prefill). -> (..., Nq, D).
 
@@ -167,12 +167,12 @@ class KVCache(NamedTuple):
     (recomputed from x — the paper's weight-stationary dataflow).
     With cfg.cache_quant == "int8", x is int8 and xs holds per-token
     scales (the macro's own 8-bit input format)."""
-    k: Optional[jax.Array] = None   # (B, Smax, Hkv, dh)
-    v: Optional[jax.Array] = None   # (B, Smax, Hkv, dh)
-    x: Optional[jax.Array] = None   # (B, Smax, D)  raw inputs (wqk modes)
-    xs: Optional[jax.Array] = None  # (B, Smax, 1) f32 scales (int8 cache)
-    ks: Optional[jax.Array] = None  # (B, Smax, Hkv, 1) scales (int8 kv)
-    vs: Optional[jax.Array] = None  # (B, Smax, Hkv, 1) scales (int8 kv)
+    k: jax.Array | None = None   # (B, Smax, Hkv, dh)
+    v: jax.Array | None = None   # (B, Smax, Hkv, dh)
+    x: jax.Array | None = None   # (B, Smax, D)  raw inputs (wqk modes)
+    xs: jax.Array | None = None  # (B, Smax, 1) f32 scales (int8 cache)
+    ks: jax.Array | None = None  # (B, Smax, Hkv, 1) scales (int8 kv)
+    vs: jax.Array | None = None  # (B, Smax, Hkv, 1) scales (int8 kv)
 
 
 def cache_mode_for(cfg) -> str:
@@ -182,7 +182,7 @@ def cache_mode_for(cfg) -> str:
 
 
 def init_kv_cache(cfg, batch: int, max_len: int, dtype,
-                  mode: Optional[str] = None) -> KVCache:
+                  mode: str | None = None) -> KVCache:
     mode = mode or cache_mode_for(cfg)
     Hkv, dh, D = cfg.num_kv_heads, cfg.head_dim, cfg.d_model
     mk = lambda *shp: jnp.zeros(shp, dtype)
@@ -365,7 +365,7 @@ def _project_v_rows(p: dict, x: jax.Array) -> jax.Array:
 
 def _decode_attend(p: dict, x_new: jax.Array, q, view: KVCache,
                    qpos: jax.Array, cfg, be,
-                   window: Optional[int]) -> jax.Array:
+                   window: int | None) -> jax.Array:
     """Attention math shared by the dense and paged decode paths.
 
     view: the post-write cache in logical-position order — the dense
@@ -418,7 +418,7 @@ def _decode_attend(p: dict, x_new: jax.Array, q, view: KVCache,
 def _decode_attend_streamed(p: dict, x_new: jax.Array, q, pool: KVCache,
                             tables: jax.Array, blocks_used: jax.Array,
                             qpos: jax.Array, cfg, be,
-                            window: Optional[int]) -> jax.Array:
+                            window: int | None) -> jax.Array:
     """Block-streamed decode attention (kernels/paged_attention): the
     physical pool is gathered block-by-block through the table inside
     the attention loop, online-softmaxed, and the stream stops at the
@@ -459,9 +459,9 @@ def _decode_attend_streamed(p: dict, x_new: jax.Array, q, pool: KVCache,
 
 def attention_decode_paged(p: dict, x_new: jax.Array, pool: KVCache,
                            tables: jax.Array, pos: jax.Array, cfg, *,
-                           window: Optional[int] = None,
+                           window: int | None = None,
                            backend=None,
-                           blocks_used: Optional[jax.Array] = None):
+                           blocks_used: jax.Array | None = None):
     """Decode/chunked-prefill attention through a paged cache.
 
     x_new (B, n, D): n new tokens per sequence at positions
@@ -523,7 +523,7 @@ def attention_decode_paged(p: dict, x_new: jax.Array, pool: KVCache,
 
 def attention_decode(p: dict, x_new: jax.Array, cache: KVCache,
                      pos: jax.Array, cfg, *,
-                     window: Optional[int] = None,
+                     window: int | None = None,
                      backend=None):
     """One decode step. x_new (B, 1, D); pos (B,) current index.
     Returns (out (B, 1, D), new_cache). The cache layout follows the

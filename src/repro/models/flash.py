@@ -18,7 +18,6 @@ per-layer window be a *traced* scalar (gemma's local:global scan).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

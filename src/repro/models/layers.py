@@ -7,7 +7,6 @@ dtype with f32 norm/softmax accumulation.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -134,7 +133,7 @@ def unembed(x: jax.Array, table_or_head: jax.Array,
 # ------------------------------------------------------------ chunked x-ent
 
 def cross_entropy_chunked(x: jax.Array, head: jax.Array, labels: jax.Array,
-                          tied: bool, mask: Optional[jax.Array] = None,
+                          tied: bool, mask: jax.Array | None = None,
                           n_chunks: int = 16):
     """Cross-entropy without materializing the full (tokens, vocab) logits.
 

@@ -11,9 +11,8 @@ Decode caches are stacked along the layer axis and threaded through
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -33,11 +32,11 @@ class Model:
         self.cfg = cfg
 
     # ------------------------------------------------------------- params
-    def init(self, rng) -> Dict:
+    def init(self, rng) -> dict:
         cfg = self.cfg
         dt = _dtype(cfg)
         ks = jax.random.split(rng, 6)
-        p: Dict[str, Any] = {
+        p: dict[str, Any] = {
             "embed": layers.init_embedding(ks[0], cfg.vocab_size,
                                            cfg.d_model, dt),
             "final_ln": layers.init_norm(cfg.norm, cfg.d_model, dt),
@@ -114,7 +113,7 @@ class Model:
                                               positions=positions)
         return layers.norm(h, p["final_ln"], cfg.norm)
 
-    def loss(self, p, batch) -> Tuple[jax.Array, Dict]:
+    def loss(self, p, batch) -> tuple[jax.Array, dict]:
         cfg = self.cfg
         h = self.hidden(p, batch)
         head = p["embed"] if cfg.tie_embeddings else p["lm_head"]
@@ -411,7 +410,6 @@ class Model:
 
     def _decode_encdec(self, p, x, cache, pos):
         cfg = self.cfg
-        dt = _dtype(cfg)
         mode = attn.cache_mode_for(cfg)
 
         def body(h, xs):
@@ -455,7 +453,6 @@ def _capture_uniform(params, x, cfg, positions, cache_stack, mode,
     n_layers = jax.tree_util.tree_leaves(params)[0].shape[0]
     window, theta = transformer._layer_windows(cfg, n_layers)
     dt = x.dtype
-    S = x.shape[-2]
 
     def body(h, xs):
         pl, kv, win, th = xs

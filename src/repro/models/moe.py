@@ -12,7 +12,6 @@ imbalance. Default g=256, cf=1.25. The §Perf MoE hillclimb iterates here.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +64,7 @@ def _dispatch_tensors(gates: jax.Array, k: int, capacity: int):
 
 
 def moe_ffn(p: dict, x: jax.Array, mcfg: MoEConfig, act: str,
-            group_size: int = 256) -> Tuple[jax.Array, dict]:
+            group_size: int = 256) -> tuple[jax.Array, dict]:
     """x (B, S, D) -> (y (B, S, D), metrics). Routing in f32."""
     B, S, D = x.shape
     T = B * S

@@ -13,7 +13,7 @@ Decode keeps (conv_state (B, W-1, conv_dim), ssm_state (B, H, P, N)).
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +76,7 @@ def _split_proj(p, u, d_model, scfg):
 
 
 def ssd_chunked(x: jax.Array, a_dt: jax.Array, B: jax.Array, C: jax.Array,
-                chunk: int, init_state: Optional[jax.Array] = None):
+                chunk: int, init_state: jax.Array | None = None):
     """Chunked SSD scan.
 
     x (b, l, h, p): dt-scaled inputs; a_dt (b, l, h): log-decay per step
@@ -142,7 +142,7 @@ def init_ssm_state(cfg_d: int, scfg: SSMConfig, batch: int, dtype) -> SSMState:
 
 
 def mamba_block(p: dict, u: jax.Array, d_model: int, scfg: SSMConfig,
-                init_state: Optional[SSMState] = None,
+                init_state: SSMState | None = None,
                 return_state: bool = False):
     """Full Mamba2 block over a sequence. u (B, L, D) -> (B, L, D)."""
     di, nh, conv_dim = dims(d_model, scfg)
@@ -188,7 +188,7 @@ def mamba_block(p: dict, u: jax.Array, d_model: int, scfg: SSMConfig,
 
 
 def mamba_decode_step(p: dict, u: jax.Array, state: SSMState, d_model: int,
-                      scfg: SSMConfig) -> Tuple[jax.Array, SSMState]:
+                      scfg: SSMConfig) -> tuple[jax.Array, SSMState]:
     """One-token recurrent step. u (B, 1, D)."""
     di, nh, conv_dim = dims(d_model, scfg)
     N, P, W = scfg.state_dim, scfg.head_dim, scfg.conv_width

@@ -11,8 +11,6 @@ Remat (``cfg.remat``): "block" checkpoints each scan body.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -76,8 +74,8 @@ def _layer_windows(cfg, n_layers: int):
 
 def uniform_stack(params, x: jax.Array, cfg, *, positions: jax.Array,
                   mask_kind: str = "causal",
-                  enc_out: Optional[jax.Array] = None,
-                  enc_positions: Optional[jax.Array] = None) -> jax.Array:
+                  enc_out: jax.Array | None = None,
+                  enc_positions: jax.Array | None = None) -> jax.Array:
     """Run the stacked layers over x (B, N, D)."""
     n_layers = jax.tree_util.tree_leaves(params)[0].shape[0]
     window, theta = _layer_windows(cfg, n_layers)

@@ -6,7 +6,7 @@ optimizer shards FSDP-style for free.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,7 @@ class AdamWConfig(NamedTuple):
     b2: float = 0.95
     eps: float = 1e-8
     weight_decay: float = 0.1
-    grad_clip: Optional[float] = 1.0
+    grad_clip: float | None = 1.0
     # bf16 moments halve optimizer HBM (10 -> 6 bytes/param with bf16
     # params): the fit-enabler for 398B-scale state on 16 GB chips.
     # Updates still compute in f32; only storage is low-precision.
@@ -66,7 +66,7 @@ def apply(params, grads, state, cfg: AdamWConfig, lr: jax.Array):
     flat_g = tdef.flatten_up_to(grads)
     flat_m = tdef.flatten_up_to(state["m"])
     flat_v = tdef.flatten_up_to(state["v"])
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v, strict=True)]
     new_p = tdef.unflatten([o[0] for o in out])
     new_m = tdef.unflatten([o[1] for o in out])
     new_v = tdef.unflatten([o[2] for o in out])

@@ -78,7 +78,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Callable, Dict, List, Optional
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -92,14 +92,14 @@ from repro.sharding import act
 @dataclasses.dataclass
 class Request:
     rid: int
-    tokens: List[int]                      # prompt
+    tokens: list[int]                      # prompt
     max_new_tokens: int = 32
     temperature: float = 0.0               # 0 => greedy
-    eos_id: Optional[int] = 2
+    eos_id: int | None = 2
     # engine-filled:
-    output: List[int] = dataclasses.field(default_factory=list)
+    output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    finish_reason: Optional[str] = None    # eos | length | truncated
+    finish_reason: str | None = None    # eos | length | truncated
 
 
 def _bucket(n: int) -> int:
@@ -112,10 +112,10 @@ def _bucket(n: int) -> int:
 class Engine:
     def __init__(self, model, params, *, max_slots: int = 8,
                  max_len: int = 512, rng_seed: int = 0,
-                 paged: Optional[bool] = None, block_size: int = 16,
-                 num_blocks: Optional[int] = None,
-                 hbm_bytes: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None,
+                 paged: bool | None = None, block_size: int = 16,
+                 num_blocks: int | None = None,
+                 hbm_bytes: int | None = None,
+                 prefill_chunk: int | None = None,
                  prefix_sharing: bool = True,
                  decode_schedule: str = "auto",
                  mesh=None,
@@ -146,7 +146,8 @@ class Engine:
                     f"score backend {self.plan.backend.name!r} cannot "
                     f"shard heads (shared K-side projection); the paged "
                     f"pool stays replicated on the "
-                    f"{mesh.shape['model']}-way model axis")
+                    f"{mesh.shape['model']}-way model axis",
+                    stacklevel=2)
                 self._shard_pool = False
             self.params = jax.device_put(
                 params, specs.param_shardings(params, mesh))
@@ -171,7 +172,7 @@ class Engine:
 
         self.pos = np.zeros(max_slots, np.int32)          # next position
         self.last_tok = np.zeros(max_slots, np.int32)
-        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.slot_req: list[Request | None] = [None] * max_slots
         self.rng = jax.random.PRNGKey(rng_seed)
         self.ticks = 0
         self.peak_active = 0
@@ -208,7 +209,7 @@ class Engine:
             self.tables = np.zeros((max_slots, self.blocks_per_seq),
                                    np.int32)
             self._tables_dev = None        # device copy, refreshed lazily
-            self.seq_blocks: List[Optional[paged_lib.SeqBlocks]] = \
+            self.seq_blocks: list[paged_lib.SeqBlocks | None] = \
                 [None] * max_slots
             if mesh is None:
                 self._decode_paged = jax.jit(model.decode_paged)
@@ -226,7 +227,7 @@ class Engine:
             if mesh is not None:
                 self.cache = jax.device_put(self.cache, self._rep)
             self._decode = jax.jit(model.decode_step)
-            self._prefills: Dict[int, Callable] = {}
+            self._prefills: dict[int, Callable] = {}
 
         # score-trace capture for the hardware simulator (repro.sim):
         # records quantized score-path operand shapes + exact bit
@@ -267,7 +268,7 @@ class Engine:
         return paged_lib.pool_device_bytes(src)
 
     # ---------------------------------------------------------- admission
-    def _free_slot(self) -> Optional[int]:
+    def _free_slot(self) -> int | None:
         for i, r in enumerate(self.slot_req):
             if r is None:
                 return i
@@ -312,7 +313,7 @@ class Engine:
                 lambda p, b: self.model.prefill(p, b, self.max_len))
         return self._prefills[plen]
 
-    def _admit_dense(self, req: Request) -> Optional[int]:
+    def _admit_dense(self, req: Request) -> int | None:
         slot = self._free_slot()
         if slot is None:
             return None
@@ -370,7 +371,7 @@ class Engine:
                 best_n, best_slot = n, s
         return best_n, best_slot
 
-    def _admit_paged(self, req: Request) -> Optional[int]:
+    def _admit_paged(self, req: Request) -> int | None:
         slot = self._free_slot()
         if slot is None:
             return None
@@ -536,8 +537,8 @@ class Engine:
                 self._evict(s)
 
     # --------------------------------------------------------------- run
-    def run(self, requests: List[Request], max_ticks: int = 10_000
-            ) -> List[Request]:
+    def run(self, requests: list[Request], max_ticks: int = 10_000
+            ) -> list[Request]:
         """Continuous batching: admit when slots free, tick until done."""
         pending = list(requests)
         for _ in range(max_ticks):

@@ -17,7 +17,6 @@ engine needs around them:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -109,8 +108,26 @@ def _layout_components(cfg, mode: str, dtype_bytes: int) -> tuple:
     """(bytes_per_token_layer, shard_dim_extents) rows for a cache
     layout — totals mirror ScoreBackend.memory_bytes_per_token; the
     extents mirror specs.paged_pool_shardings (head axis, then the
-    head-dim fallback)."""
+    head-dim fallback).
+
+    With ``cfg.cache_quant == "int8"`` the rows mirror the quantized
+    leaves of ``attention.init_kv_cache`` exactly: data rows at 1 byte
+    plus their f32 scale rows as SEPARATE components — scales have
+    their own (narrower) shard extents, and folding them into the data
+    row would overstate how much of the block shards. Without this the
+    per-device budget *underestimates* high-extent int8 pools (scales
+    replicate while data shards) and ``max_blocks`` overcommits HBM —
+    the drift class repro.analysis.contracts checks for."""
     Hkv, dh, D = cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    if getattr(cfg, "cache_quant", None) == "int8":
+        kv = ((2 * Hkv * dh, (Hkv, dh)),          # int8 K and V rows
+              (2 * Hkv * 4, (Hkv,)))              # f32 ks/vs scales
+        x = ((D, (D,)),                           # int8 raw-X rows
+             (4, ()))                             # f32 per-token scale
+        # V stays in the cache dtype in xv mode (init_kv_cache only
+        # quantizes the score-side operand)
+        v = ((Hkv * dh * dtype_bytes, (Hkv, dh)),)
+        return {"kv": kv, "x": x, "xv": x + v}[mode]
     kv = (2 * Hkv * dh * dtype_bytes, (Hkv, dh))  # K and V rows
     v = (Hkv * dh * dtype_bytes, (Hkv, dh))       # V rows only
     x = (D * dtype_bytes, (D,))                   # raw-X rows
@@ -143,7 +160,7 @@ def budget_for(cfg, dtype_bytes: int = 2) -> CacheBudget:
                        backend=pl.backend.name)
 
 
-def compare_modes(cfg, dtype_bytes: int = 2) -> Dict[str, int]:
+def compare_modes(cfg, dtype_bytes: int = 2) -> dict[str, int]:
     """bytes/token/layer of every mode — the DESIGN.md §4 crossover:
     pure-x wins iff D < 2·Hkv·dh (whisper: 384 < 768 ✓)."""
     kv_row = 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes

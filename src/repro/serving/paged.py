@@ -34,7 +34,7 @@ never hands it out.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from collections.abc import Callable, Sequence
 
 NULL_BLOCK = 0
 
@@ -51,7 +51,7 @@ def shared_prefix_blocks(a: Sequence[int], b: Sequence[int],
     always prefills at least its final prompt token itself (the
     admission logits must come from *its* forward pass)."""
     lcp = 0
-    for x, y in zip(a, b):
+    for x, y in zip(a, b, strict=False):    # prompts differ in length
         if x != y:
             break
         lcp += 1
@@ -71,7 +71,7 @@ class BlockAllocator:
             raise ValueError("need >= 2 blocks (block 0 is the null block)")
         self.num_blocks = num_blocks
         self.block_size = block_size
-        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._free: list[int] = list(range(num_blocks - 1, 0, -1))
         self._ref = [0] * num_blocks
 
     # ------------------------------------------------------------ queries
@@ -88,7 +88,7 @@ class BlockAllocator:
         return self._ref[bid]
 
     # ------------------------------------------------------------- verbs
-    def alloc(self, n: int) -> Optional[List[int]]:
+    def alloc(self, n: int) -> list[int] | None:
         """Allocate ``n`` blocks (refcount 1 each) or None if short."""
         if n > len(self._free):
             return None
@@ -97,7 +97,7 @@ class BlockAllocator:
             self._ref[b] = 1
         return ids
 
-    def fork(self, ids: Sequence[int]) -> List[int]:
+    def fork(self, ids: Sequence[int]) -> list[int]:
         """Share ``ids`` with a new owner (copy-on-write semantics:
         refcount goes up; the blocks themselves are not copied)."""
         for b in ids:
@@ -118,7 +118,7 @@ class BlockAllocator:
 
     def ensure_exclusive(self, bid: int,
                          copy_block: Callable[[int, int], None]
-                         ) -> Optional[int]:
+                         ) -> int | None:
         """Copy-on-write: return a block id safe to write through.
 
         If ``bid`` is exclusively owned it is returned as-is; if shared,
@@ -159,7 +159,7 @@ def pool_device_bytes(pool, device=None) -> int:
 class SeqBlocks:
     """One sequence's block-table row: logical order, index i covers
     positions [i*block_size, (i+1)*block_size)."""
-    ids: List[int]
+    ids: list[int]
     num_shared: int = 0      # leading ids forked from a prefix donor
 
     def __len__(self):

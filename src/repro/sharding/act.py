@@ -14,7 +14,6 @@ host/CI runs trace with no mesh and the helpers are identity.
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -23,7 +22,7 @@ _MESH_STACK = []
 
 
 @contextlib.contextmanager
-def use_mesh(mesh: Optional[Mesh]):
+def use_mesh(mesh: Mesh | None):
     _MESH_STACK.append(mesh)
     try:
         yield
@@ -31,7 +30,7 @@ def use_mesh(mesh: Optional[Mesh]):
         _MESH_STACK.pop()
 
 
-def current_mesh() -> Optional[Mesh]:
+def current_mesh() -> Mesh | None:
     return _MESH_STACK[-1] if _MESH_STACK else None
 
 

@@ -17,12 +17,10 @@ oracle (tests/test_ring.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 # jax.shard_map was promoted out of jax.experimental after 0.4.x, and
 # the varying-manual-axes (vma) marking via jax.lax.pcast arrived with
@@ -59,7 +57,7 @@ def _merge(acc, m, l, s_blk, v_blk):
 
 def ring_attention(q, k, v, pos_q, pos_k, mesh: Mesh, axis: str, *,
                    scale: float, causal: bool = True,
-                   window: Optional[int] = None):
+                   window: int | None = None):
     """q (H, N, E), k (H, M, E), v (H, M, dv), pos_q (N,), pos_k (M,);
     N and M shard over ``axis``. Returns out (H, N, dv) f32, sharded
     like q. Positions travel with their blocks, so causal/window masks

@@ -14,7 +14,7 @@ FSDP axis; "model" is TP/EP; the batch shards over ("pod","data").
 from __future__ import annotations
 
 import re
-from typing import Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -27,7 +27,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # query heads don't divide a 16-way model axis, so wq falls back from
 # head-sharding to head-DIM sharding (128 % 16 == 0); whisper's odd 51865
 # vocab drops the vocab axis and keeps the d_model FSDP axis.
-_RULES: Sequence[Tuple[str, Tuple[Tuple, ...]]] = (
+_RULES: Sequence[tuple[str, tuple[tuple, ...]]] = (
     # embeddings / heads
     (r"embed$",            (("model", "data"), (None, "data"))),   # (V, D)
     (r"lm_head$",          (("data", "model"), ("data", None))),   # (D, V)
@@ -70,21 +70,21 @@ def _axis_size(mesh: Mesh, axis) -> int:
     return mesh.shape[axis]
 
 
-def _divides(template: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> bool:
+def _divides(template: tuple, shape: tuple[int, ...], mesh: Mesh) -> bool:
     n_lead = len(shape) - len(template)
-    for dim, axis in zip(shape[n_lead:], template):
+    for dim, axis in zip(shape[n_lead:], template, strict=False):
         if axis is not None and dim % _axis_size(mesh, axis) != 0:
             return False
     return True
 
 
-def _fit(template: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+def _fit(template: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
     """Pad template to rank (leading None) and drop non-dividing axes
     (pjit argument shardings must divide exactly)."""
     n_lead = len(shape) - len(template)
     spec = [None] * n_lead + list(template)
     out = []
-    for dim, axis in zip(shape, spec):
+    for dim, axis in zip(shape, spec, strict=False):
         if axis is not None and dim % _axis_size(mesh, axis) != 0:
             axis = None
         out.append(axis)
@@ -94,7 +94,7 @@ def _fit(template: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
     return P(*out)
 
 
-def spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+def spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
     for pat, templates in _RULES:
         if re.search(pat, path):
             for t in templates:
@@ -175,17 +175,27 @@ def paged_pool_shardings(pool_tree, mesh: Mesh):
     msz = _axis_size(mesh, "model")
 
     def one(leaf):
-        shape = leaf.shape
-        spec = [None] * len(shape)
-        for ax in (3, 4):              # Hkv-or-D first, then dh
-            if ax < len(shape) and shape[ax] % msz == 0 \
-                    and shape[ax] >= msz:
-                spec[ax] = "model"
-                break
-        while spec and spec[-1] is None:
-            spec.pop()
-        return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, paged_pool_spec(leaf.shape, msz))
     return jax.tree_util.tree_map(one, pool_tree)
+
+
+def paged_pool_spec(shape: tuple[int, ...], model_size: int) -> P:
+    """The pure PartitionSpec rule behind ``paged_pool_shardings`` for
+    one ``(L, NB, BS, ...)`` pool leaf: first of {axis 3 (Hkv or D),
+    axis 4 (dh)} that divides the model-axis extent shards; everything
+    else replicates. Exposed separately (no Mesh, no devices) so the
+    static contract checker (repro.analysis.contracts) can cross-check
+    ``PagedCacheBudget`` accounting against the layout rule for mesh
+    extents the host can't build."""
+    spec = [None] * len(shape)
+    for ax in (3, 4):                  # Hkv-or-D first, then dh
+        if ax < len(shape) and shape[ax] % model_size == 0 \
+                and shape[ax] >= model_size:
+            spec[ax] = "model"
+            break
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
 
 
 def cache_shardings(cache_tree, mesh: Mesh, batch: int):

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable, Optional, Sequence, Union
+from collections.abc import Iterable, Sequence
 
 from repro.core import energy
 from repro.sim import schedule as sched_mod
@@ -116,7 +116,7 @@ class MacroSim:
                  n_macros: int = 1, zero_skip: bool = True,
                  double_buffer: bool = True,
                  weights_resident: bool = False,
-                 buffer: Optional[GlobalBuffer] = None):
+                 buffer: GlobalBuffer | None = None):
         if n_macros < 1:
             raise ValueError("n_macros must be >= 1")
         self.spec = spec
@@ -127,8 +127,7 @@ class MacroSim:
         self.buffer = buffer or GlobalBuffer()
 
     # --------------------------------------------------------------- run
-    def simulate(self, workload: Union[ScoreWorkload,
-                                       Iterable[ScoreWorkload]]) -> SimReport:
+    def simulate(self, workload: ScoreWorkload | Iterable[ScoreWorkload]) -> SimReport:
         if isinstance(workload, ScoreWorkload):
             workload = [workload]
         events: Sequence[ScoreWorkload] = list(workload)

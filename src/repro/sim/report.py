@@ -5,7 +5,6 @@ analytic-model cross-check (DESIGN.md §9: with skipping disabled and
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from repro.core import energy
 
@@ -148,7 +147,7 @@ class SimReport:
         d["tech_nm"] = self.spec.tech_nm
         return d
 
-    def summary(self, title: Optional[str] = None) -> str:
+    def summary(self, title: str | None = None) -> str:
         L = []
         if title:
             L.append(f"== {title} ==")

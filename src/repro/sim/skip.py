@@ -31,7 +31,8 @@ Two parallel accounting domains:
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
+from collections.abc import Sequence
 
 import numpy as np
 

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Sequence
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -69,9 +69,9 @@ class TraceEvent:
 @dataclasses.dataclass
 class Trace:
     meta: TraceMeta
-    events: List[TraceEvent] = dataclasses.field(default_factory=list)
+    events: list[TraceEvent] = dataclasses.field(default_factory=list)
 
-    def workloads(self) -> List[ScoreWorkload]:
+    def workloads(self) -> list[ScoreWorkload]:
         return [e.workload(self.meta) for e in self.events]
 
     # ------------------------------------------------------ persistence
@@ -142,7 +142,7 @@ class TraceCapture:
                              f"match meta.d={meta.d}")
         self.embed = np.asarray(embed, np.float32)
         self.trace = Trace(meta=meta)
-        self._token_stats: Dict[int, OperandStats] = {}
+        self._token_stats: dict[int, OperandStats] = {}
 
     @classmethod
     def for_model(cls, model, params, *, decode_schedule: str = "?",

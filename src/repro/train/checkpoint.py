@@ -19,7 +19,7 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
@@ -52,7 +52,7 @@ def _treedef_to_str(tdef) -> str:
     return str(tdef)
 
 
-def save(ckpt_dir: str, step: int, tree, extras: Optional[Dict[str, Any]] = None):
+def save(ckpt_dir: str, step: int, tree, extras: dict[str, Any] | None = None):
     """Atomic checkpoint write. ``tree`` is any pytree of arrays."""
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves, tdef = _flatten(tree)
@@ -89,7 +89,7 @@ def save(ckpt_dir: str, step: int, tree, extras: Optional[Dict[str, Any]] = None
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def latest_step(ckpt_dir: str) -> int | None:
     """Newest *complete* checkpoint step, validating the manifest."""
     latest = os.path.join(ckpt_dir, "LATEST")
     candidates = []
@@ -126,7 +126,7 @@ def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
                              manifest["dtypes"][i]) for i in range(n)]
     if shardings is not None:
         shard_leaves = tdef.flatten_up_to(shardings)
-        leaves = [jax.device_put(l, s) for l, s in zip(leaves, shard_leaves)]
+        leaves = [jax.device_put(l, s) for l, s in zip(leaves, shard_leaves, strict=True)]
     tree = tdef.unflatten(leaves)
     return tree, manifest["extras"]
 

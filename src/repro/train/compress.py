@@ -15,13 +15,12 @@ all-reduced alongside (negligible bytes).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
-def _leaf_quantize(g: jax.Array, rng: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _leaf_quantize(g: jax.Array, rng: jax.Array) -> tuple[jax.Array, jax.Array]:
     gf = g.astype(jnp.float32)
     amax = jnp.max(jnp.abs(gf))
     scale = jnp.maximum(amax, 1e-30) / 127.0
@@ -46,7 +45,7 @@ def compress_grads(grads, residual, step: jax.Array):
     base = jax.random.PRNGKey(0)
     base = jax.random.fold_in(base, step)
     qs, scales, new_res = [], [], []
-    for i, (g, r) in enumerate(zip(leaves, res_leaves)):
+    for i, (g, r) in enumerate(zip(leaves, res_leaves, strict=True)):
         corrected = g.astype(jnp.float32) + r
         q, s = _leaf_quantize(corrected, jax.random.fold_in(base, i))
         deq = q.astype(jnp.float32) * s
@@ -62,7 +61,7 @@ def decompress_grads(q_tree, scale_tree):
         lambda q, s: q.astype(jnp.float32) * s, q_tree, scale_tree)
 
 
-def compressed_psum(grads, residual, step: jax.Array, axis: Optional[str]):
+def compressed_psum(grads, residual, step: jax.Array, axis: str | None):
     """Quantize -> psum(int32) -> dequantize with max-scale, inside
     shard_map. With axis=None (single pod / already-reduced grads) this
     degrades to the identity quantize-dequantize roundtrip + EF, used by

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import signal
 import time
-from typing import Callable, Optional
+from collections.abc import Callable
 
 
 def install(trainer) -> None:
@@ -42,7 +42,7 @@ def with_retries(fn: Callable, max_retries: int = 3,
                  log: Callable[[str], None] = print):
     """Bounded-backoff retry wrapper for transient failures."""
     def wrapped(*args, **kwargs):
-        last: Optional[BaseException] = None
+        last: BaseException | None = None
         for attempt in range(max_retries + 1):
             try:
                 return fn(*args, **kwargs)

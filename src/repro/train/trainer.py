@@ -17,12 +17,11 @@ counted, not crashed on.
 from __future__ import annotations
 
 import time
-from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import NamedTuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.optim import adamw
 from repro.optim.schedule import warmup_cosine
@@ -49,7 +48,7 @@ def _tree_where(pred, a, b):
 
 
 def make_train_step(model, tc: TrainConfig,
-                    compress_axis: Optional[str] = None) -> Callable:
+                    compress_axis: str | None = None) -> Callable:
     """Pure step: (params, opt_state, batch) -> (params', opt_state',
     metrics). opt_state carries the EF residual when compression is on."""
     ocfg = tc.adamw
@@ -130,7 +129,6 @@ def sharded_train_step(model, tc: TrainConfig, mesh, params_tree,
     if tc.grad_compress:
         o_sh["ef_residual"] = p_sh
     b_sh = specs.data_shardings(batch_tree, mesh)
-    m_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     return jax.jit(
         step,
         in_shardings=(p_sh, o_sh, b_sh),
@@ -144,7 +142,7 @@ class Trainer:
     stateless-resumable; restart resumes from the newest valid manifest."""
 
     def __init__(self, model, tc: TrainConfig, data_fn: Callable,
-                 ckpt_dir: Optional[str] = None, mesh=None,
+                 ckpt_dir: str | None = None, mesh=None,
                  log_fn: Callable[[str], None] = print):
         self.model, self.tc, self.data_fn = model, tc, data_fn
         self.ckpt_dir, self.mesh, self.log = ckpt_dir, mesh, log_fn
@@ -156,7 +154,7 @@ class Trainer:
         self._emergency = True
 
     # -------------------------------------------------------------- run
-    def run(self, rng=None, start_params=None, steps: Optional[int] = None):
+    def run(self, rng=None, start_params=None, steps: int | None = None):
         tc = self.tc
         rng = jax.random.PRNGKey(0) if rng is None else rng
         params = start_params or self.model.init(rng)

@@ -50,7 +50,7 @@ def assert_trees_close(a, b, rtol=1e-5, atol=1e-5):
     la = jax.tree_util.tree_leaves(a)
     lb = jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=True):
         np.testing.assert_allclose(np.asarray(x, np.float32),
                                    np.asarray(y, np.float32),
                                    rtol=rtol, atol=atol)

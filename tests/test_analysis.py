@@ -1,0 +1,265 @@
+"""The static-analysis subsystem (repro.analysis) is itself under test:
+every lint rule fires on a planted-bad fixture and stays silent on its
+good twin; the contract checker rejects perturbed accounting/
+divisibility rules; the invariant checker proves the one-TP-collective
+claim on a forced 1x4 mesh AND flags a planted extra collective
+(subprocess with forced host devices, conftest-style)."""
+import subprocess
+import sys
+import textwrap
+
+from conftest import forced_devices_env
+
+from repro.analysis import contracts, lint
+
+
+def codes(src, path="src/repro/somemod.py"):
+    return [f.code for f in lint.check_source(textwrap.dedent(src), path)]
+
+
+# ------------------------------------------------------------ lint rules
+
+def test_ra101_tracer_branch_fires_and_good_twin_silent():
+    bad = """
+        import jax.numpy as jnp
+        def f(x):
+            if jnp.all(x > 0):
+                return x
+            return -x
+    """
+    good = """
+        import jax.numpy as jnp
+        def f(x):
+            if bool(jnp.all(x > 0)):
+                return x
+            return -x
+    """
+    assert "RA101" in codes(bad)
+    assert codes(good) == []
+
+
+def test_ra101_covers_while_ternary_assert():
+    assert "RA101" in codes("""
+        import jax.numpy as jnp
+        def f(x):
+            while jnp.any(x):
+                x = x - 1
+            return x
+    """)
+    assert "RA101" in codes("""
+        import jax.numpy as jnp
+        def f(x):
+            return 1 if jnp.max(x) > 0 else 0
+    """)
+    # float()-wrapped comparison is the documented remedy: silent
+    assert codes("""
+        import jax.numpy as jnp
+        def f(x):
+            assert float(jnp.max(x)) > 0
+            return x
+    """) == []
+
+
+def test_ra102_host_sync_in_jit_target():
+    bad = """
+        import jax
+        def step(x):
+            return x.item() + 1
+        run = jax.jit(step)
+    """
+    good = """
+        import jax
+        def step(x):
+            return x + 1
+        run = jax.jit(step)
+        def report(x):
+            return x.item()          # not a jit target: fine
+    """
+    assert "RA102" in codes(bad)
+    assert codes(good) == []
+
+
+def test_ra103_xla_env_mutation():
+    bad = 'import os\nos.environ["XLA_FLAGS"] = "--foo"\n'
+    good = 'import os\nos.environ["MY_FLAG"] = "--foo"\n'
+    assert "RA103" in codes(bad)
+    assert codes(good) == []
+
+
+def test_ra103_suppression_needs_reason():
+    with_reason = ('import os\n'
+                   '# ra: allow[RA103] must precede the jax import\n'
+                   'os.environ["XLA_FLAGS"] = "--foo"\n')
+    bare = ('import os\n'
+            '# ra: allow[RA103]\n'
+            'os.environ["XLA_FLAGS"] = "--foo"\n')
+    assert codes(with_reason) == []
+    assert codes(bare) == ["RA100"]
+
+
+def test_ra104_late_docstring():
+    bad = 'import os\n"""I am not a docstring."""\n'
+    good = '"""I am the docstring."""\nimport os\ndel os\n'
+    assert "RA104" in codes(bad)
+    assert codes(good) == []
+
+
+def test_ra105_nonhashable_static():
+    bad = """
+        import jax
+        def f(x, shape=[8, 8]):
+            return x
+        g = jax.jit(f, static_argnames="shape")
+    """
+    good = """
+        import jax
+        def f(x, shape=(8, 8)):
+            return x
+        g = jax.jit(f, static_argnames="shape")
+    """
+    bad_call = """
+        import jax
+        def f(x, shape=(8, 8)):
+            return x
+        g = jax.jit(f, static_argnames="shape")
+        y = f(1, shape=[8, 8])
+    """
+    assert "RA105" in codes(bad)
+    assert codes(good) == []
+    assert "RA105" in codes(bad_call)
+
+
+def test_ra106_unpinned_jit_only_in_serving():
+    src = """
+        import jax
+        def f(x):
+            return x
+        def tick(x):
+            return jax.jit(f)(x)
+    """
+    assert "RA106" in codes(src, path="src/repro/serving/engine2.py")
+    # outside serving/ the rule does not apply
+    assert codes(src, path="src/repro/models/model2.py") == []
+
+
+def test_ra106_pinned_forms_are_silent():
+    good = """
+        import jax
+        def f(x):
+            return x
+        g = jax.jit(f)                       # module-level name: pinned
+        class E:
+            def __init__(self):
+                self._step = jax.jit(f)      # attribute: pinned
+            def build(self, cache, k):
+                cache[k] = jax.jit(f)        # subscript: pinned
+                return jax.jit(f)            # returned: pinned by caller
+    """
+    bad_local = """
+        import jax
+        def f(x):
+            return x
+        def tick(x):
+            h = jax.jit(f)                   # rebuilt per tick
+            return h(x)
+    """
+    assert codes(good, path="src/repro/serving/engine2.py") == []
+    assert "RA106" in codes(bad_local, path="src/repro/serving/engine2.py")
+
+
+def test_lint_clean_on_this_repo():
+    findings = lint.check_paths()
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+# --------------------------------------------------------- contract layer
+
+def test_contracts_clean_on_this_repo():
+    assert contracts.run_all(verbose=False) == []
+
+
+def test_contracts_reject_perturbed_divisibility():
+    # a spec rule that shards the layer axis (extent 2) on a 4-way mesh
+    # must be caught by the divisibility check
+    def bad_spec(shape, msz):
+        return ("model",)
+    out = contracts.check_budget_vs_layout(extents=(4,), spec_fn=bad_spec)
+    assert any("% 4" in v or "device_put" in v for v in out), out
+
+
+def test_contracts_reject_never_sharding_spec():
+    # a spec that never shards disagrees with the budget's split
+    # decisions (and with per-device bytes) at every msz > 1
+    out = contracts.check_budget_vs_layout(extents=(4,),
+                                           spec_fn=lambda shape, msz: ())
+    assert out
+
+
+def test_contracts_reject_lying_budget():
+    from repro.serving import kvcache
+
+    class Lying:
+        """Delegates everything but under-reports per-device bytes."""
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __getattr__(self, k):
+            return getattr(self._inner, k)
+
+        def per_device_bytes_per_block(self, shards):
+            return self._inner.per_device_bytes_per_block(shards) - 8
+
+    out = contracts.check_budget_vs_layout(
+        budget_fn=lambda cfg, **kw: Lying(
+            kvcache.paged_budget_for(cfg, **kw)))
+    assert any("UNDER" in v for v in out), out
+
+
+# -------------------------------------------------------- invariant layer
+
+def test_graph_stability_and_no_host_ops_clean():
+    from repro.analysis import invariants
+    assert invariants.check_graph_stability() == []
+    assert invariants.check_no_host_ops() == []
+
+
+_MESHED_SCRIPT = """
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import invariants
+from repro.models import attention as attn
+
+mesh = invariants._mesh()
+clean = invariants.check_attention_one_collective(mesh)
+assert not clean, f"clean attention flagged: {clean}"
+print("CLEAN_OK")
+
+# plant an extra collective: force h onto the model axis and back —
+# GSPMD must insert a reshard (all-gather) the pinned table forbids
+orig = attn.attention_decode_paged
+
+def planted(pa, hx, pool, tables, pos, cfg, **kw):
+    hx = jax.lax.with_sharding_constraint(
+        hx, NamedSharding(mesh, P(None, None, "model")))
+    hx = jax.lax.with_sharding_constraint(hx, NamedSharding(mesh, P()))
+    return orig(pa, hx, pool, tables, pos, cfg, **kw)
+
+attn.attention_decode_paged = planted
+caught = invariants.check_attention_one_collective(mesh)
+assert caught, "planted extra collective went undetected"
+print("PLANTED_DETECTED", len(caught))
+"""
+
+
+def test_one_collective_on_forced_mesh_and_planted_violation():
+    """Subprocess with 4 forced host devices (env via conftest — this
+    process's jax stays single-device): the one-TP-collective claim
+    holds on a real 1x4 mesh, and a planted extra collective makes the
+    checker report a violation."""
+    r = subprocess.run([sys.executable, "-c", _MESHED_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env=forced_devices_env(4))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "CLEAN_OK" in r.stdout
+    assert "PLANTED_DETECTED" in r.stdout

@@ -2,7 +2,6 @@
 nesting-aware trip-count multipliers) and the jaxpr cost walker."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import hlo
 from repro.launch.jaxpr_cost import jaxpr_cost

@@ -118,6 +118,6 @@ def test_flash_vjp_matches_quadratic_grad(rng):
     l2, g2 = jax.value_and_grad(loss(cb), argnums=(0, 1))(p, x)
     assert abs(float(l1 - l2)) < 1e-3
     for a, b in zip(jax.tree_util.tree_leaves(g1),
-                    jax.tree_util.tree_leaves(g2)):
+                    jax.tree_util.tree_leaves(g2), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-2, atol=1e-3)

@@ -123,7 +123,7 @@ def test_paged_engine_matches_dense(score_mode):
     ra, rb = _reqs(5), _reqs(5)
     dense.run(ra)
     pagede.run(rb)
-    for x, y in zip(ra, rb):
+    for x, y in zip(ra, rb, strict=True):
         assert x.output == y.output, (x.rid, x.output, y.output)
 
 
@@ -142,7 +142,7 @@ def test_paged_logits_match_dense(setup, schedule):
                                      block_size=4, chunk=8, steps=4,
                                      schedule=schedule)
     assert len(ref) == len(got) == 5
-    for r, g in zip(ref, got):
+    for r, g in zip(ref, got, strict=True):
         np.testing.assert_allclose(r, g, rtol=1e-5, atol=1e-5)
 
 
@@ -344,7 +344,7 @@ def test_block_reuse_after_eviction(setup):
     eng_fresh = Engine(model, params, max_slots=2, max_len=64, paged=True,
                        block_size=8, prefill_chunk=16)
     eng_fresh.run(fresh)
-    for a, b in zip(wave2, fresh):
+    for a, b in zip(wave2, fresh, strict=True):
         assert a.output == b.output       # recycled blocks are clean
 
 
@@ -438,6 +438,6 @@ def test_prefix_sharing_correctness_and_reuse(setup):
 
     shared.run(rs)
     plain.run(rp)
-    for a, b in zip(rs, rp):
+    for a, b in zip(rs, rp, strict=True):
         assert a.done and a.output == b.output
     assert shared.allocator.num_free == shared.allocator.num_usable

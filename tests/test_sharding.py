@@ -12,7 +12,7 @@ import sys
 import jax
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from conftest import forced_devices_env
 from repro.configs.base import get_arch, reduced
@@ -53,7 +53,7 @@ def test_rules_elastic_across_meshes(mesh_axes):
     }
     for path, shape in cases.items():
         spec = specs.spec_for(path, shape, m)
-        for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape), strict=False):
             if ax is None:
                 continue
             sz = m.shape[ax] if not isinstance(ax, tuple) else \

@@ -1,6 +1,5 @@
 """Trainer integration: loss goes down, checkpoint/restart is exact,
 NaN guard skips, compression is bounded-error, schedules behave."""
-import dataclasses
 import os
 
 import jax
@@ -56,7 +55,7 @@ def test_checkpoint_resume_bitexact(small_model, tmp_path):
                   log_fn=lambda *_: None)
     p_res, _, _ = tr3.run()
     for a, b in zip(jax.tree_util.tree_leaves(p_full),
-                    jax.tree_util.tree_leaves(p_res)):
+                    jax.tree_util.tree_leaves(p_res), strict=True):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
 
@@ -112,7 +111,7 @@ def test_elastic_restore_other_mesh(tmp_path, small_model):
     step, tree, _ = out
     assert step == 7
     for a, b in zip(jax.tree_util.tree_leaves(tree),
-                    jax.tree_util.tree_leaves(p)):
+                    jax.tree_util.tree_leaves(p), strict=True):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
 

@@ -4,7 +4,6 @@ These tests prove the reproduction's central claim: S = X·W_QK·Xᵀ equals
 the standard (X·Wq)(X·Wk)ᵀ for NoPE/absolute archs, including the exact
 bias fold via the constant-1 augmentation (qwen-style QKV bias).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

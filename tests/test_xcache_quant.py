@@ -41,7 +41,7 @@ def test_int8_xcache_matches_bf16():
     assert cache8["attn"].xs is not None
     # greedy tokens identical; logits close (per-token int8 quant noise)
     assert toks_bf16 == toks_int8
-    for a, b in zip(logits_bf16, logits_int8):
+    for a, b in zip(logits_bf16, logits_int8, strict=True):
         np.testing.assert_allclose(a, b, atol=0.25)
 
 
