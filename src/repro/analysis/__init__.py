@@ -1,6 +1,8 @@
 """Static analysis: machine-verified structural claims + JAX-footgun lint.
 
-Three layers, one CI gate (``python -m repro.analysis``):
+Four layers, one CI gate (``python -m repro.analysis``; use
+``--only {lint,contracts,kernelcheck,invariants}`` to run a subset,
+``--list`` to enumerate):
 
   * ``repro.analysis.invariants`` — jaxpr/HLO invariant checker: the
     one-TP-collective attention claim, pinned tick collective
@@ -11,10 +13,18 @@ Three layers, one CI gate (``python -m repro.analysis``):
     VMEM_D_LIMIT mirrors and derivation, BlockSpec/grid math,
     ``PagedCacheBudget`` accounting vs ``specs.paged_pool_spec`` for
     every (layout, quantization, mesh-extent) combination.
-  * ``repro.analysis.lint`` — pure-AST lint pass (RA101-RA106), no jax
+  * ``repro.analysis.kernelcheck`` — symbolic kernel verifier: evaluates
+    every kernel's BlockSpec index maps over an affine/interval abstract
+    domain (``repro.analysis.absdomain``) and proves, for each
+    planner-reachable (config, layout, quantization, mesh-extent) combo,
+    in-bounds access (including the paged null-block-0 gather redirect),
+    write-once output coverage, double-buffer-aware VMEM pipeline fit,
+    and int8-operand/scale-ref pairing. ``jax.eval_shape`` only; no
+    devices, nothing executes.
+  * ``repro.analysis.lint`` — pure-AST lint pass (RA101-RA108), no jax
     import, suitable for pre-commit.
 
-DESIGN.md §11 lists every checked invariant and how to add one.
+DESIGN.md §11-§12 list every checked invariant/proof and how to add one.
 
 This package intentionally imports nothing at the top level: the lint
 layer must stay importable without jax, and the invariant layer must be

@@ -36,7 +36,11 @@ from __future__ import annotations
 
 from collections.abc import Sequence
 
-VMEM_BUDGET = 16 * 2**20        # bytes of VMEM per TensorCore
+# one budget constant across the static layers: the kernel verifier's
+# per-grid-step byte model (repro.analysis.kernelcheck) and these
+# contracts must agree on what "fits VMEM" means
+from repro.analysis.kernelcheck import VMEM_BUDGET, wqk_step_bytes
+
 _EXTENTS = (1, 2, 4, 8, 16)     # model-axis extents to sweep
 
 
@@ -55,13 +59,13 @@ def check_vmem_limits() -> list[str]:
             f"{wqk_ops.VMEM_D_LIMIT} — the planner's VMEM-residency "
             f"decision no longer matches the kernel's actual limit.")
 
+    # the per-grid-step account comes from the kernel verifier's
+    # double-buffer-aware model over the kernel's REAL BlockSpecs
+    # (kernelcheck.spec_step_bytes), not a hand-maintained formula
+    bn, bm = wqk_kernel.DEFAULT_BLOCK_N, wqk_kernel.DEFAULT_BLOCK_M
+
     def footprint(d: int) -> int:
-        bn, bm = wqk_kernel.DEFAULT_BLOCK_N, wqk_kernel.DEFAULT_BLOCK_M
-        w = d * d                       # int8 W_QK, one head
-        x = bn * d + bm * d             # int8 X tiles
-        g = bn * d * 4                  # int32 X·W intermediate
-        o = bn * bm * 4                 # int32 score tile
-        return w + x + g + o
+        return wqk_step_bytes(d, block_n=bn, block_m=bm)
 
     d = wqk_ops.VMEM_D_LIMIT
     if footprint(d) > VMEM_BUDGET:
@@ -109,7 +113,7 @@ def check_wqk_grid(shapes: Sequence | None = None) -> list[str]:
         if bn % 8 or bm % 8:
             out.append(f"wqk block sizes ({bn},{bm}) not sublane-"
                        f"aligned (8) for int8.")
-        resident = D * D + (bn + bm) * D + bn * D * 4 + bn * bm * 4
+        resident = wqk_step_bytes(D, block_n=bn, block_m=bm, heads=H)
         if resident > VMEM_BUDGET:
             out.append(f"wqk grid step for D={D} needs {resident} "
                        f"bytes VMEM > {VMEM_BUDGET}.")
@@ -129,8 +133,8 @@ def check_paged_grid(workloads: Sequence[dict] | None = None
         out.append(
             f"paged.NULL_BLOCK={paged.NULL_BLOCK} but the kernel's "
             f"index map redirects dead blocks to physical block 0 "
-            f"(kernels/paged_attention/kernel.py kmap) — the redirect "
-            f"would fetch a LIVE block.")
+            f"(kernels/paged_attention/kernel.block_index_map) — the "
+            f"redirect would fetch a LIVE block.")
 
     workloads = workloads or (
         # B, H, Hkv, n, E, dv, NB, BS, max_len, int8

@@ -1,6 +1,6 @@
 """AST lint pass: the JAX footguns this codebase has actually hit.
 
-Six rules, each encoding a constraint the serving/kernel stack relies
+Eight rules, each encoding a constraint the serving/kernel stack relies
 on but Python cannot express (see DESIGN.md §11 for the full contract
 list). The linter is pure ``ast`` — importable and runnable without
 jax, so pre-commit and CI can execute it in milliseconds:
@@ -34,6 +34,21 @@ jax, so pre-commit and CI can execute it in milliseconds:
                             is created — every call re-enters the
                             compilation cache through a fresh callable,
                             so nothing is ever cached.
+  RA107 impure-index-map    a ``pl.BlockSpec`` index map with Python
+                            branching in its body, or closing over a
+                            name that is neither a parameter nor a
+                            module-level binding (a potential tracer).
+                            Index maps must be pure affine functions of
+                            grid indices and scalar-prefetch refs —
+                            that purity is what lets
+                            ``repro.analysis.kernelcheck`` prove
+                            in-bounds/write-once over them.
+  RA108 program-id-branch   Python ``if``/``while``/ternary on a
+                            ``pl.program_id(...)`` value inside a
+                            kernel body: grid indices are traced
+                            scalars, so Python branching freezes one
+                            trace-time path for EVERY grid step. Use
+                            ``pl.when`` / ``jnp.where``.
 
 Suppressions are explicit and must carry a justification::
 
@@ -51,6 +66,7 @@ CLI::
 from __future__ import annotations
 
 import ast
+import builtins as _py_builtins
 import dataclasses
 import re
 import sys
@@ -384,6 +400,140 @@ def _rule_unpinned_jit(tree: ast.Module, path: str):
         # returning a jitted callable pin at their own call site.
 
 
+# ------------------------------------------------------------ rule: 107
+
+_BUILTIN_NAMES = frozenset(dir(_py_builtins))
+
+
+def _module_names(tree: ast.Module) -> set:
+    """Names bound at module level (defs, classes, assigns, imports)."""
+    names = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+                elif isinstance(t, (ast.Tuple, ast.List)):
+                    names.update(e.id for e in t.elts
+                                 if isinstance(e, ast.Name))
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                names.add(a.asname or a.name.split(".")[0])
+    return names
+
+
+def _is_blockspec_call(node) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    return (isinstance(f, ast.Attribute) and f.attr == "BlockSpec") \
+        or (isinstance(f, ast.Name) and f.id == "BlockSpec")
+
+
+def _index_map_issues(fn, module_names):
+    """Purity issues of one index-map Lambda/FunctionDef: Python
+    branching, or free names that are neither parameters, local
+    bindings, module-level names, nor builtins (potential closed-over
+    tracers)."""
+    bound = set()
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.arg):
+            bound.add(sub.arg)
+        elif isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Store):
+            bound.add(sub.id)
+    for sub in ast.walk(fn):
+        if isinstance(sub, (ast.If, ast.IfExp, ast.While)):
+            yield (sub.lineno,
+                   "Python branching inside a BlockSpec index map — the "
+                   "map must be a pure affine function of its grid/"
+                   "scalar-prefetch args (kernelcheck proves bounds "
+                   "over exactly that form); select with jnp.where on "
+                   "the returned coordinate instead.")
+        elif isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+            if sub.id not in bound and sub.id not in module_names \
+                    and sub.id not in _BUILTIN_NAMES:
+                yield (sub.lineno,
+                       f"BlockSpec index map closes over {sub.id!r}, "
+                       f"which is neither a parameter nor a module-"
+                       f"level name — closures over enclosing-function "
+                       f"locals can capture tracers. Hoist the map to a "
+                       f"named module-level function (scalar-prefetch "
+                       f"refs arrive as arguments).")
+
+
+def _rule_impure_index_map(tree: ast.Module):
+    module_names = _module_names(tree)
+    defs = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+    for node in ast.walk(tree):
+        if not _is_blockspec_call(node):
+            continue
+        imap = node.args[1] if len(node.args) >= 2 else None
+        for kw in node.keywords:
+            if kw.arg == "index_map":
+                imap = kw.value
+        if isinstance(imap, ast.Lambda):
+            for line, msg in _index_map_issues(imap, module_names):
+                yield line, "RA107", msg
+        elif isinstance(imap, ast.Name) and imap.id in defs:
+            for line, msg in _index_map_issues(defs[imap.id],
+                                               module_names):
+                yield line, "RA107", msg
+        # attribute refs (othermod.x_index_map) are checked in the
+        # module that defines them — every kernel module carries its
+        # own maps next to its pallas_call
+
+
+# ------------------------------------------------------------ rule: 108
+
+def _is_program_id_call(node) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "program_id"
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id == "pl")
+
+
+def _rule_program_id_branch(tree: ast.Module):
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not any(_is_program_id_call(s) for s in ast.walk(fn)):
+            continue
+        grid_names = set()
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign) \
+                    and _is_program_id_call(sub.value):
+                grid_names.update(t.id for t in sub.targets
+                                  if isinstance(t, ast.Name))
+
+        def refs_grid(expr) -> bool:
+            for s in ast.walk(expr):
+                if _is_program_id_call(s):
+                    return True
+                if isinstance(s, ast.Name) and s.id in grid_names:
+                    return True
+            return False
+
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.If, ast.IfExp, ast.While)) \
+                    and refs_grid(sub.test):
+                yield (sub.lineno, "RA108",
+                       "Python branch on a pl.program_id(...) value "
+                       "inside a kernel body — grid indices are traced "
+                       "scalars, so this freezes ONE trace-time path "
+                       "for every grid step. Use pl.when(...) or "
+                       "jnp.where.")
+
+
 # --------------------------------------------------------------- driver
 
 _RULES = (
@@ -393,6 +543,8 @@ _RULES = (
     lambda tree, path: _rule_late_docstring(tree),
     lambda tree, path: _rule_nonhashable_static(tree),
     _rule_unpinned_jit,
+    lambda tree, path: _rule_impure_index_map(tree),
+    lambda tree, path: _rule_program_id_branch(tree),
 )
 
 

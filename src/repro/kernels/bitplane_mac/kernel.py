@@ -25,6 +25,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+# BlockSpec index maps over grid (i, j) — named module-level functions
+# so repro.analysis.kernelcheck can import and evaluate the exact maps
+# the kernel runs. Pure affine in grid indices (RA107).
+
+def xa_index_map(i, j):
+    """X_a row-block i streams for every j."""
+    return (i, 0)
+
+
+def xb_index_map(i, j):
+    """X_b row-block j streams for every i."""
+    return (j, 0)
+
+
+def w_index_map(i, j):
+    """The stationary weight tile — the SRAM array, loaded once."""
+    return (0, 0)
+
+
+def out_index_map(i, j):
+    """Each (i, j) grid step owns exactly one output tile."""
+    return (i, j)
+
+
 def _bitplane_kernel(xa_ref, xb_ref, w_ref, o_ref, *, bits: int):
     """o (1?, BN, BM) int32 = bit-serial bilinear MAC over the tile.
 
@@ -82,11 +106,11 @@ def bitplane_scores(xa: jax.Array, xb: jax.Array, w: jax.Array, *,
         functools.partial(_bitplane_kernel, bits=bits),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, D), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_m, D), lambda i, j: (j, 0)),
-            pl.BlockSpec((D, D), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_n, D), xa_index_map),
+            pl.BlockSpec((block_m, D), xb_index_map),
+            pl.BlockSpec((D, D), w_index_map),
         ],
-        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((block_n, block_m), out_index_map),
         out_shape=jax.ShapeDtypeStruct((N, M), jnp.int32),
         interpret=interpret,
     )(xa, xb, w)

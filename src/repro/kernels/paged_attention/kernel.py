@@ -36,6 +36,79 @@ from repro.kernels.paged_attention.ref import (NEG_INF, _block_values,
 BIG_WINDOW = 1 << 30
 
 
+# --------------------------------------------------------------- index maps
+# Named module-level functions so repro.analysis.kernelcheck can import
+# and evaluate the EXACT maps the kernel runs (RA107). Grid is (b, j);
+# the four trailing args are the scalar-prefetch refs
+# (tables, used, qpos, win) Pallas passes to every index map.
+
+def block_index_map(b, j, tables_ref, used_ref, qpos_ref, win_ref,
+                    _where=jnp.where):
+    """Physical pool block for (b, j): the table entry while live, the
+    null block (0) past the sequence's used length — the dead gather is
+    cheap and never computed on (``pl.when`` skips it).
+
+    ``_where`` exists so the static verifier can substitute its
+    abstract-domain select; Pallas always calls with the default.
+    """
+    return (_where(j < used_ref[b], tables_ref[b, j], 0), 0, 0, 0)
+
+
+def q_index_map(b, j, *_refs):
+    """Sequence b's query block — revisited across the whole j sweep."""
+    return (b, 0, 0, 0)
+
+
+def out_index_map(b, j, *_refs):
+    """Output block (b); held in VMEM across j, written on live steps."""
+    return (b, 0, 0, 0)
+
+
+def wv_index_map(b, j, *_refs):
+    """The whole W_V tensor, stationary for every grid step."""
+    return (0, 0, 0)
+
+
+def bv_index_map(b, j, *_refs):
+    """The whole b_V tensor, stationary for every grid step."""
+    return (0, 0)
+
+
+def build_specs(q, k_pool, *, v_pool=None, k_scale=None, v_scale=None,
+                wv=None, bv=None):
+    """Single source of truth for the kernel's operand plumbing.
+
+    Accepts arrays or ShapeDtypeStructs. Returns ``(specs, flags)``:
+    ``specs`` is a list of ``(name, operand, block_shape, index_map)``
+    in the exact positional order the kernel unpacks its refs, and
+    ``flags`` is the ``has_*`` kwarg dict for ``_kernel``. Used by both
+    ``paged_attend_pallas`` and the static verifier, so the positional
+    ref-threading and the proof about it cannot drift.
+    """
+    B, H, n, E = q.shape
+    NB, BS, G = k_pool.shape[:3]
+    Hkv = v_pool.shape[2] if v_pool is not None else wv.shape[1]
+    dv = v_pool.shape[3] if v_pool is not None else wv.shape[2]
+    specs = [
+        ("q", q, (1, H, n, E), q_index_map),
+        ("k_pool", k_pool, (1, BS, G, k_pool.shape[3]), block_index_map),
+    ]
+    if k_scale is not None:
+        specs.append(("k_scale", k_scale, (1, BS, G, 1), block_index_map))
+    if v_pool is not None:
+        specs.append(("v_pool", v_pool, (1, BS, Hkv, dv), block_index_map))
+    if v_scale is not None:
+        specs.append(("v_scale", v_scale, (1, BS, Hkv, 1), block_index_map))
+    if wv is not None:
+        specs.append(("wv", wv, tuple(wv.shape), wv_index_map))
+    if bv is not None:
+        specs.append(("bv", bv, tuple(bv.shape), bv_index_map))
+    flags = dict(has_ks=k_scale is not None, has_v=v_pool is not None,
+                 has_vs=v_scale is not None, has_wv=wv is not None,
+                 has_bv=bv is not None)
+    return specs, flags
+
+
 def _kernel(tables_ref, used_ref, qpos_ref, win_ref, *refs,
             BS: int, G: int, Hkv: int, H: int, n: int, dv: int,
             scale: float, softcap: float, augment: bool, requant: bool,
@@ -138,44 +211,19 @@ def paged_attend_pallas(q: jax.Array, k_pool: jax.Array,
         BIG_WINDOW if window is None else window).astype(jnp.int32)
     win = win.reshape(1)
 
-    # physical block for (b, j): the table entry while live, the null
-    # block past the sequence's used length (cheap, never computed on)
-    def kmap(b, j, tables_ref, used_ref, qpos_ref, win_ref):
-        return (jnp.where(j < used_ref[b], tables_ref[b, j], 0), 0, 0, 0)
-
-    operands = [q, k_pool]
-    in_specs = [
-        pl.BlockSpec((1, H, n, E),
-                     lambda b, j, *_: (b, 0, 0, 0)),
-        pl.BlockSpec((1, BS, G, k_pool.shape[3]), kmap),
-    ]
-    if k_scale is not None:
-        operands.append(k_scale)
-        in_specs.append(pl.BlockSpec((1, BS, G, 1), kmap))
-    if v_pool is not None:
-        operands.append(v_pool)
-        in_specs.append(pl.BlockSpec((1, BS, Hkv, dv), kmap))
-    if v_scale is not None:
-        operands.append(v_scale)
-        in_specs.append(pl.BlockSpec((1, BS, Hkv, 1), kmap))
-    if wv is not None:
-        operands.append(wv)
-        in_specs.append(pl.BlockSpec(wv.shape, lambda b, j, *_: (0, 0, 0)))
-    if bv is not None:
-        operands.append(bv)
-        in_specs.append(pl.BlockSpec(bv.shape, lambda b, j, *_: (0, 0)))
+    specs, flags = build_specs(q, k_pool, v_pool=v_pool, k_scale=k_scale,
+                               v_scale=v_scale, wv=wv, bv=bv)
+    operands = [op for _, op, _, _ in specs]
+    in_specs = [pl.BlockSpec(block, imap) for _, _, block, imap in specs]
 
     kern = functools.partial(
         _kernel, BS=BS, G=G, Hkv=Hkv, H=H, n=n, dv=dv, scale=scale,
-        softcap=softcap, augment=augment, requant=requant,
-        has_ks=k_scale is not None, has_v=v_pool is not None,
-        has_vs=v_scale is not None, has_wv=wv is not None,
-        has_bv=bv is not None)
+        softcap=softcap, augment=augment, requant=requant, **flags)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(B, nbk),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, H, n, dv), lambda b, j, *_: (b, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, H, n, dv), out_index_map),
         scratch_shapes=[
             pltpu.VMEM((H, n), jnp.float32),
             pltpu.VMEM((H, n), jnp.float32),

@@ -109,6 +109,27 @@ def _bucket(n: int) -> int:
     return b
 
 
+class NonDividingShardWarning(UserWarning):
+    """A pool leaf's head axis does not divide the model axis: the
+    layout fell back to head-dim sharding or replication, and the
+    streamed decode gather re-materializes those leaves every tick
+    (fallback-correct, but with extra collectives — the PR 5 known
+    issue). Structured so callers/tests can filter on the category and
+    inspect the offending layout."""
+
+    def __init__(self, message: str, *, model_size: int,
+                 shapes: tuple[tuple[int, ...], ...]):
+        super().__init__(message)
+        self.model_size = model_size
+        self.shapes = shapes
+
+
+# one warning per distinct (model-axis extent, offending leaf shapes) —
+# every engine built on the same fallback layout after the first stays
+# quiet, so sweeps/tests don't drown in repeats
+_NONDIV_WARNED: set = set()
+
+
 class Engine:
     def __init__(self, model, params, *, max_slots: int = 8,
                  max_len: int = 512, rng_seed: int = 0,
@@ -204,6 +225,23 @@ class Engine:
             self.pool = model.init_paged_cache(
                 num_blocks, block_size,
                 mesh=mesh if self._shard_pool else None)
+            if self._shard_pool:
+                from repro.sharding import specs
+                msz = mesh.shape["model"]
+                bad = specs.nondividing_pool_leaves(self.pool, msz)
+                if bad:
+                    key = (msz, tuple(bad))
+                    if key not in _NONDIV_WARNED:
+                        _NONDIV_WARNED.add(key)
+                        warnings.warn(NonDividingShardWarning(
+                            f"paged pool leaves {bad} cannot shard "
+                            f"their head axis over the {msz}-way model "
+                            f"axis; they fall back to head-dim sharding "
+                            f"or replication. Decode stays correct, but "
+                            f"the streamed gather re-materializes these "
+                            f"leaves per tick (extra collectives).",
+                            model_size=msz, shapes=tuple(bad)),
+                            stacklevel=2)
             if mesh is not None and not self._shard_pool:
                 self.pool = jax.device_put(self.pool, self._rep)
             self.tables = np.zeros((max_slots, self.blocks_per_seq),

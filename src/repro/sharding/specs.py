@@ -198,6 +198,35 @@ def paged_pool_spec(shape: tuple[int, ...], model_size: int) -> P:
     return P(*spec)
 
 
+def nondividing_pool_leaves(pool, model_size: int) -> list[tuple[int, ...]]:
+    """Pool leaves whose intended head-axis shard (axis 3) does NOT
+    divide the model axis, so ``paged_pool_spec`` falls back to head-dim
+    sharding or replication — the PR 5 "involuntary remat" regime.
+
+    ``pool`` is a pytree of arrays/ShapeDtypeStructs (or an iterable of
+    shape tuples). Leaves whose axis-3 extent is 1 (per-token scale
+    rows, by-design replicated) and leaves too small to carry a head
+    axis are not fallbacks and are skipped. Shared by the serving
+    engine's one-time ``NonDividingShardWarning`` and by
+    ``repro.analysis.kernelcheck``'s fallback-correct classification,
+    so the runtime warning and the static verdict cannot drift."""
+    if model_size <= 1:
+        return []
+    def _is_shape(x):
+        return (isinstance(x, (tuple, list)) and x
+                and all(isinstance(d, int) for d in x))
+    leaves = jax.tree_util.tree_leaves(pool, is_leaf=_is_shape)
+    shapes = [tuple(getattr(leaf, "shape", leaf)) for leaf in leaves]
+    out = []
+    for shape in shapes:
+        if len(shape) <= 3 or shape[3] <= 1:
+            continue
+        spec = tuple(paged_pool_spec(shape, model_size))
+        if len(spec) <= 3 or spec[3] != "model":
+            out.append(shape)
+    return out
+
+
 def cache_shardings(cache_tree, mesh: Mesh, batch: int):
     """Decode-cache shardings.
 
