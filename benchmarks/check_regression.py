@@ -50,6 +50,12 @@ mesh-sharded serving engine must keep a >=2x per-device HBM reduction
 (and >=3x admitted concurrency at equal per-device HBM) at 4-way
 tensor parallelism, with greedy outputs and per-token logits matching
 the single-device oracle.
+``BENCH_async.json``'s ``async`` section (benchmarks/serving_async):
+the streaming front end's p99 TTFT must not exceed batch-sync at
+equal Poisson load, the SLO scheduler must beat FIFO on high-priority
+p99 TTFT (with at least one preemption observed), the radix prefix
+cache must hit >=50% of offered blocks on the shared-system-prompt
+trace, and async greedy outputs must equal the sync engine's.
 """
 from __future__ import annotations
 
@@ -79,6 +85,13 @@ FLOORS = {
         ("scale", "admitted_ratio_equal_hbm", ">=", 3.0),
         ("scale", "outputs_equal", "==", True),
         ("scale", "logits_ok", "==", True),
+    ],
+    "async": [
+        ("latency", "sync_over_async_p99", ">=", 1.0),
+        ("slo", "fifo_over_slo_p99_hi", ">=", 1.0),
+        ("slo", "slo_preempted", "==", True),
+        ("radix", "hit_rate", ">=", 0.5),
+        ("parity", "outputs_equal", "==", True),
     ],
 }
 

@@ -25,13 +25,13 @@ class Report:
 
 def main():
     from benchmarks import (fig6_cpu_gpu, fig7_memory, roofline,
-                            score_backends, serving_load, serving_sharded,
-                            sim_trace, table1_macro, wqk_vs_standard,
-                            zeroskip_bench)
+                            score_backends, serving_async, serving_load,
+                            serving_sharded, sim_trace, table1_macro,
+                            wqk_vs_standard, zeroskip_bench)
     report = Report()
     for mod in (table1_macro, fig6_cpu_gpu, fig7_memory, zeroskip_bench,
                 wqk_vs_standard, score_backends, serving_load,
-                serving_sharded, sim_trace, roofline):
+                serving_async, serving_sharded, sim_trace, roofline):
         mod.run(report)
     n_fail = sum(1 for _, ok in report.checks if not ok)
     print(f"\n{'='*60}\n{len(report.checks)} checks, {n_fail} failures")

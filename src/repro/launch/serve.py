@@ -6,11 +6,22 @@
 Real deployments restore params from --ckpt; without one, randomly
 initialized weights serve synthetic traffic (throughput/latency path
 identical).
+
+Async streaming mode (``--stream``) routes the same requests through
+the thread-pumped asyncio front end (``serving.frontend``): tokens
+stream per tick, admission/preemption run under the SLO scheduler, and
+the run ends with a ``ServingMetrics`` snapshot (TTFT / inter-token /
+queue-wait percentiles, preemption counts, radix hit rate).
+``--arrival-trace`` replays a JSON arrival schedule instead of the
+synthetic all-at-once batch; ``--slo-ttft-ms`` attaches a deadline to
+every request.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
+import json
 import time
 
 import jax
@@ -33,6 +44,29 @@ def parse_bytes(s: str) -> int:
         if t.endswith(suf):
             return int(float(t[:-1]) * mul)
     return int(float(t))
+
+
+async def _stream_serve(eng, arrivals, args):
+    """Replay ``arrivals`` ((t_offset, Request, priority) sorted or
+    not) through the async front end on the wall clock; returns the
+    metrics snapshot."""
+    from repro.serving.frontend import (AsyncEngine, FIFOScheduler,
+                                        SLOScheduler)
+    sched = (FIFOScheduler() if args.scheduler == "fifo"
+             else SLOScheduler())
+    async with AsyncEngine(eng, scheduler=sched) as srv:
+        t0 = time.monotonic()
+        for t_off, req, prio in sorted(arrivals, key=lambda a: a[0]):
+            delay = t0 + t_off - time.monotonic()
+            if delay > 0:
+                await asyncio.sleep(delay)
+            stream = srv.submit(req, priority=prio,
+                                slo_ttft_ms=args.slo_ttft_ms)
+            if len(arrivals) == 1:
+                async for tok in stream:
+                    print(f"[serve] rid={req.rid} tok={tok}")
+        await srv.drain()
+        return srv.metrics.snapshot(eng)
 
 
 def main():
@@ -82,6 +116,30 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for all requests "
                          "(0 = greedy; >0 = categorical, seeded)")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the async front end "
+                         "(serving.frontend.AsyncEngine): per-tick "
+                         "token streaming, SLO-aware admission/"
+                         "preemption, metrics snapshot at exit")
+    ap.add_argument("--scheduler", default="slo",
+                    choices=("slo", "fifo"),
+                    help="--stream scheduling policy: 'slo' = priority/"
+                         "deadline with evict-to-queue preemption; "
+                         "'fifo' = head-of-queue arrival order")
+    ap.add_argument("--radix-cache", action="store_true",
+                    help="radix-tree prefix cache over historical "
+                         "requests (paged mode; pinned refcounted "
+                         "blocks, LRU-evicted under pressure)")
+    ap.add_argument("--arrival-trace", default=None, metavar="PATH",
+                    help="JSON arrival schedule for --stream: a list of "
+                         "{'t': sec_offset, 'prompt_len'|'tokens', "
+                         "'max_new', 'priority'} objects replayed on "
+                         "the wall clock instead of the synthetic "
+                         "all-at-once batch")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="--stream: attach a time-to-first-token "
+                         "deadline (ms from arrival) to every request "
+                         "without an explicit one in the trace")
     ap.add_argument("--sim-trace", default=None, metavar="PATH",
                     help="capture the quantized score-path workload "
                          "(shapes + bit sparsity per prefill chunk / "
@@ -122,6 +180,7 @@ def main():
                  prefix_sharing=not args.no_prefix_sharing,
                  decode_schedule=args.decode_schedule,
                  mesh=mesh,
+                 radix_cache=args.radix_cache,
                  capture_trace=args.sim_trace is not None)
     if eng.plan is not None:
         budget = kvcache.budget_for(cfg)
@@ -148,19 +207,41 @@ def main():
         print("[serve] dense cache pool "
               f"[{args.slots} slots x {args.max_len} tokens]")
     rng = np.random.default_rng(0)
-    reqs = []
-    for i in range(args.requests):
-        toks = [1] + rng.integers(3, cfg.vocab_size,
-                                  rng.integers(2, 9)).tolist()
-        r = Request(rid=i, tokens=toks, max_new_tokens=args.max_new,
-                    eos_id=None, temperature=args.temperature)
-        if cfg.enc_dec:
-            r.tokens = [1]
-            r.enc_embeds = frontends.audio_frames(1, 64, cfg.d_model,
-                                                  seed=i)
-        reqs.append(r)
+
+    def _synth_tokens(plen=None):
+        plen = plen if plen is not None else int(rng.integers(2, 9))
+        return [1] + rng.integers(3, cfg.vocab_size,
+                                  max(plen - 1, 1)).tolist()
+
+    arrivals = []                       # (t_offset, Request, priority)
+    if args.arrival_trace:
+        with open(args.arrival_trace) as f:
+            trace = json.load(f)
+        for i, ev in enumerate(trace):
+            toks = (list(ev["tokens"]) if "tokens" in ev
+                    else _synth_tokens(ev.get("prompt_len")))
+            r = Request(rid=i, tokens=toks,
+                        max_new_tokens=ev.get("max_new", args.max_new),
+                        eos_id=None, temperature=args.temperature)
+            arrivals.append((float(ev.get("t", 0.0)), r,
+                             int(ev.get("priority", 0))))
+    else:
+        for i in range(args.requests):
+            r = Request(rid=i, tokens=_synth_tokens(),
+                        max_new_tokens=args.max_new, eos_id=None,
+                        temperature=args.temperature)
+            if cfg.enc_dec:
+                r.tokens = [1]
+                r.enc_embeds = frontends.audio_frames(1, 64, cfg.d_model,
+                                                      seed=i)
+            arrivals.append((0.0, r, 0))
+    reqs = [r for _, r, _ in arrivals]
+
     t0 = time.time()
-    eng.run(reqs)
+    if args.stream:
+        snap = asyncio.run(_stream_serve(eng, arrivals, args))
+    else:
+        eng.run(reqs)
     dt = time.time() - t0
     tok = sum(len(r.output) for r in reqs)
     reasons = {}
@@ -170,6 +251,9 @@ def main():
           f"{dt:.1f}s ({tok/dt:.1f} tok/s); finish reasons: "
           + ", ".join(f"{k}={v}" for k, v in sorted(reasons.items(),
                                                     key=lambda kv: str(kv[0]))))
+    if args.stream:
+        print("[serve] metrics: " + json.dumps(snap, indent=2,
+                                               sort_keys=True))
     if args.sim_trace:
         eng.trace.save(args.sim_trace)
         print(f"[serve] wrote {len(eng.trace.trace.events)} score-trace "

@@ -34,11 +34,26 @@ not ``max_len``. **gather** forces the dense logical-view path (the
 parity oracle).
 
 Sampling is greedy at ``Request.temperature == 0`` and categorical at
-``temperature > 0`` (per-slot; logits scaled by the temperature);
-deterministic given the seed either way. Every finished request
+``temperature > 0``. Categorical draws are keyed **per slot** by
+``(engine seed, rid, token index)`` — a request samples the same
+tokens solo, batched, or resumed after preemption, so outputs stay
+reproducible under async admission reordering. Every finished request
 records ``finish_reason``: ``"eos"`` (sampled its eos_id), ``"length"``
 (max_new_tokens reached), or ``"truncated"`` (hit the ``max_len - 1``
 context wall with budget left).
+
+**Serving front end** (``serving/frontend/``): the engine stays a
+blocking tick machine; the asyncio layer (``AsyncEngine``) pumps it
+from a thread, the SLO scheduler drives ``admit``/``preempt`` every
+tick, and ``radix_cache=True`` attaches the radix-tree prefix cache so
+prompt prefixes are forked from *historical* requests, not just
+co-resident ones (LRU-evicted when admission needs the blocks back).
+``preempt(slot)`` evicts a running request back to the queue marked
+``finish_reason="preempted"``; re-``admit`` detects prior output and
+resumes losslessly — the rebuilt cache rows are bit-equal because each
+row depends only on its token prefix. ``on_token``/``on_finish`` hooks
+fire host-side per appended token / finished request (None by default:
+the sync path is unchanged).
 
 ``capture_trace=True`` attaches a ``repro.sim`` score-trace hook: every
 prefill chunk and decode tick records its quantized score-operand
@@ -138,6 +153,8 @@ class Engine:
                  hbm_bytes: int | None = None,
                  prefill_chunk: int | None = None,
                  prefix_sharing: bool = True,
+                 radix_cache: bool = False,
+                 admit_scan: int = 8,
                  decode_schedule: str = "auto",
                  mesh=None,
                  capture_trace: bool = False):
@@ -176,6 +193,9 @@ class Engine:
             raise ValueError(
                 f"paged cache unsupported for family {cfg.family!r}")
         self.paged = model.supports_paged() if paged is None else bool(paged)
+        if radix_cache and not self.paged:
+            raise ValueError("radix_cache=True requires the paged cache "
+                             "(block ids are what the tree stores)")
         if decode_schedule not in ("auto", "stream", "gather"):
             raise ValueError(
                 f"decode_schedule={decode_schedule!r}; expected "
@@ -194,9 +214,22 @@ class Engine:
         self.pos = np.zeros(max_slots, np.int32)          # next position
         self.last_tok = np.zeros(max_slots, np.int32)
         self.slot_req: list[Request | None] = [None] * max_slots
-        self.rng = jax.random.PRNGKey(rng_seed)
+        # sampling base key: per-slot draws fold in (rid, token index)
+        # so a request's sampled tokens never depend on co-scheduling
+        self._base_key = jax.random.PRNGKey(rng_seed)
         self.ticks = 0
         self.peak_active = 0
+        self.preemptions = 0
+        # how deep Engine.run / the schedulers scan the pending queue
+        # when the head doesn't fit (head-of-line fix; bounded so a
+        # huge queue never turns admission into an O(queue) stall)
+        self.admit_scan = admit_scan
+        # front-end hooks (serving/frontend): called host-side whenever
+        # a token is appended to a request / a request finishes. None
+        # (the default) keeps the sync engine entirely unchanged.
+        self.on_token: Callable | None = None
+        self.on_finish: Callable | None = None
+        self.radix = None
 
         if self.paged:
             self.block_size = block_size
@@ -215,6 +248,9 @@ class Engine:
             self.allocator = paged_lib.BlockAllocator(num_blocks, block_size)
             self.prefill_chunk = prefill_chunk or 4 * block_size
             self.prefix_sharing = prefix_sharing
+            if radix_cache:
+                from repro.serving.frontend.radix_cache import RadixCache
+                self.radix = RadixCache(self.allocator, block_size)
             # 'auto' follows the planner (cfg.decode_schedule override
             # included); explicit 'stream'/'gather' wins — streaming is
             # engaged by actually passing blocks_used into the graph,
@@ -316,20 +352,55 @@ class Engine:
         self.peak_active = max(self.peak_active,
                                sum(r is not None for r in self.slot_req))
 
+    def check_servable(self, req: Request) -> None:
+        """Raise for a request the engine could NEVER serve (prompt too
+        long for the context, or more blocks than the whole pool) —
+        admission failures for *transient* reasons return False from
+        ``admit`` instead. Front ends call this at submit time so the
+        error surfaces to the submitter, not the pump thread."""
+        ctx_len = len(req.tokens) + max(len(req.output) - 1, 0)
+        if ctx_len >= self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {ctx_len} >= "
+                f"max_len {self.max_len} — can never be served; raise "
+                f"--max-len or truncate the prompt")
+        if self.paged:
+            need = min(len(req.tokens) + req.max_new_tokens, self.max_len)
+            n_res = min(paged_lib.blocks_for(need, self.block_size),
+                        self.blocks_per_seq)
+            if n_res > self.allocator.num_usable:
+                raise ValueError(
+                    f"request {req.rid}: needs {n_res} blocks, pool has "
+                    f"{self.allocator.num_usable} — raise --hbm-budget "
+                    f"or lower max_len/max_new_tokens")
+
     def admit(self, req: Request) -> bool:
         """Prefill ``req`` into a free slot; False if the slot pool (or,
         paged, the block allocator) cannot serve it right now. A prompt
         that can never fit (plen >= max_len) raises instead of silently
-        truncating into garbage."""
-        if len(req.tokens) >= self.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt length {len(req.tokens)} >= "
-                f"max_len {self.max_len} — can never be served; raise "
-                f"--max-len or truncate the prompt")
-        slot = self._admit_paged(req) if self.paged \
-            else self._admit_dense(req)
+        truncating into garbage.
+
+        A request with prior ``output`` (preempted mid-decode, see
+        ``preempt``) is **resumed**: the cache context — prompt plus
+        every generated token except the last — is rebuilt (forked from
+        the radix cache where possible, recomputed otherwise; cache
+        rows depend only on their prefix, so either way they are
+        bit-equal to the pre-preemption rows) and decoding continues
+        from the last sampled token without drawing a fresh admission
+        sample."""
+        self.check_servable(req)
+        resume = bool(req.output)
+        # cache context: every token whose row must exist before the
+        # next decode tick feeds req.output[-1] (fresh: the prompt)
+        ctx = req.tokens + req.output[:-1] if resume else req.tokens
+        slot = self._admit_paged(req, ctx, resume) if self.paged \
+            else self._admit_dense(req, ctx, resume)
         if slot is None:
             return False
+        if resume:
+            req.finish_reason = None        # clears "preempted"
+            self._note_active()
+            return True
         # the admission-sampled token may already complete the request
         # (max_new_tokens <= 1, or EOS straight out of prefill) — finish
         # now instead of letting a tick append a second token
@@ -342,7 +413,26 @@ class Engine:
             self._evict(slot)
         else:
             self._note_active()
+        if req.done and self.on_finish:
+            self.on_finish(req)
         return True
+
+    def admit_from(self, pending: list[Request]) -> int:
+        """Admit every request that fits *now* from the first
+        ``admit_scan`` entries of ``pending`` (popping admitted ones;
+        arrival order otherwise preserved). A blocked head no longer
+        starves smaller requests behind it. Returns admitted count."""
+        admitted = 0
+        progress = True
+        while progress and pending and self._free_slot() is not None:
+            progress = False
+            for i, r in enumerate(pending[:self.admit_scan]):
+                if self.admit(r):
+                    pending.pop(i)
+                    admitted += 1
+                    progress = True
+                    break
+        return admitted
 
     # ---------------------------------------------------- dense admission
     def _prefill_fn(self, plen: int):
@@ -351,14 +441,15 @@ class Engine:
                 lambda p, b: self.model.prefill(p, b, self.max_len))
         return self._prefills[plen]
 
-    def _admit_dense(self, req: Request) -> int | None:
+    def _admit_dense(self, req: Request, ctx: list[int],
+                     resume: bool) -> int | None:
         slot = self._free_slot()
         if slot is None:
             return None
-        plen = len(req.tokens)
+        plen = len(ctx)
         b = _bucket(plen)
         toks = np.zeros((1, b), np.int32)
-        toks[0, :plen] = req.tokens
+        toks[0, :plen] = ctx
         batch = {"tokens": self._dev(toks),
                  "lengths": self._dev(np.asarray([plen], np.int32))}
         cfg = self.model.cfg
@@ -370,14 +461,19 @@ class Engine:
             logits, cache1 = self._prefill_fn(b)(self.params, batch)
         if self.trace is not None:
             # dense prefill sweeps the full bucketed self-attention
-            self.trace.record("prefill", req.tokens, req.tokens,
+            self.trace.record("prefill", ctx, ctx,
                               n_q_sched=b, n_kv_sched=b)
         self._copy_slot(cache1, slot)
-        tok = self._sample(logits, [req.temperature])[0]
-        req.output.append(int(tok))
+        if resume:
+            tok = req.output[-1]          # continue, don't resample
+        else:
+            tok = int(self._sample(logits, [req])[0])
+            req.output.append(tok)
+            if self.on_token:
+                self.on_token(req, tok)
         self.slot_req[slot] = req
         self.pos[slot] = plen
-        self.last_tok[slot] = int(tok)
+        self.last_tok[slot] = tok
         return slot
 
     def _copy_slot(self, cache1, slot: int):
@@ -393,64 +489,87 @@ class Engine:
         self.cache = jax.tree_util.tree_map(one, self.cache, cache1)
 
     # ---------------------------------------------------- paged admission
-    def _find_prefix_donor(self, req: Request):
-        """Longest shareable prompt prefix (whole blocks) among active
-        sequences. Cache rows at position p depend only on tokens 0..p,
-        so equal prompt prefixes mean bit-equal rows — the borrower
-        forks those blocks instead of recomputing them."""
+    def _find_prefix_donor(self, tokens: list[int]):
+        """Longest shareable prefix (whole blocks) of ``tokens`` among
+        active sequences. Cache rows at position p depend only on
+        tokens 0..p, so equal prefixes mean bit-equal rows — the
+        borrower forks those blocks instead of recomputing them."""
         best_n, best_slot = 0, None
         for s, r in enumerate(self.slot_req):
             if r is None:
                 continue
-            n = paged_lib.shared_prefix_blocks(req.tokens, r.tokens,
+            n = paged_lib.shared_prefix_blocks(tokens, r.tokens,
                                                self.block_size)
             n = min(n, len(self.seq_blocks[s].ids))
             if n > best_n:
                 best_n, best_slot = n, s
         return best_n, best_slot
 
-    def _admit_paged(self, req: Request) -> int | None:
+    def _admit_paged(self, req: Request, ctx: list[int],
+                     resume: bool) -> int | None:
         slot = self._free_slot()
         if slot is None:
             return None
-        plen = len(req.tokens)
+        plen = len(ctx)
         BS = self.block_size
-        need_tokens = min(plen + req.max_new_tokens, self.max_len)
+        # total reservation is arrival-invariant: resume re-reserves
+        # exactly what the fresh admission did (prompt + full budget)
+        need_tokens = min(len(req.tokens) + req.max_new_tokens,
+                          self.max_len)
         n_res = min(paged_lib.blocks_for(need_tokens, BS),
                     self.blocks_per_seq)
 
+        # prefix donors, best of both: a live co-scheduled sequence
+        # (fork its blocks) or the radix cache of historical prefixes.
+        # Cap so a fresh admission still prefills >= its final prompt
+        # token itself (the admission logits must be its own forward
+        # pass); harmless for resume (no admission sample drawn).
         n_shared, donor = 0, None
+        radix_ids: list[int] = []
         if self.prefix_sharing:
-            n_shared, donor = self._find_prefix_donor(req)
+            n_shared, donor = self._find_prefix_donor(ctx)
             n_shared = min(n_shared, n_res)
-        n_fresh = n_res - n_shared
-        if n_fresh > self.allocator.num_usable:
-            raise ValueError(
-                f"request {req.rid}: needs {n_fresh} blocks, pool has "
-                f"{self.allocator.num_usable} — raise --hbm-budget or "
-                f"lower max_len/max_new_tokens")
+        if self.radix is not None:
+            # resume may fork every full ctx block (no admission
+            # logits needed); fresh admissions keep one token back
+            cap = min((plen if resume else max(plen - 1, 0)) // BS,
+                      n_res)
+            radix_ids = self.radix.match(ctx, max_blocks=cap)
+            if len(radix_ids) <= n_shared:
+                radix_ids = []             # live donor wins ties
+        if radix_ids:
+            ids_shared = self.allocator.fork(radix_ids)
+        elif n_shared:
+            ids_shared = self.allocator.fork(
+                self.seq_blocks[donor].ids[:n_shared])
+        else:
+            ids_shared = []
+        n_fresh = n_res - len(ids_shared)
         if n_fresh > self.allocator.num_free:
-            return None                        # exhausted: stay queued
+            # LRU-evict historical prefixes before giving up: cached
+            # blocks are strictly less valuable than a live admission
+            if self.radix is not None:
+                self.radix.evict(n_fresh - self.allocator.num_free)
+            if n_fresh > self.allocator.num_free:
+                self.allocator.free(ids_shared)
+                return None                # exhausted: stay queued
         fresh = self.allocator.alloc(n_fresh)
-        ids = []
-        if n_shared:
-            ids = self.allocator.fork(self.seq_blocks[donor].ids[:n_shared])
-        ids += fresh
-        self.seq_blocks[slot] = paged_lib.SeqBlocks(ids, n_shared)
+        ids = ids_shared + fresh
+        self.seq_blocks[slot] = paged_lib.SeqBlocks(ids, len(ids_shared))
         self.tables[slot, :] = 0
         self.tables[slot, :len(ids)] = ids
         self._tables_dev = None
 
-        # chunked prefill: stream the (unshared part of the) prompt in
+        # chunked prefill: stream the (unshared part of the) context in
         # fixed-size chunks through the shared decode graph. Writes at
         # block-aligned ``start`` onward touch only exclusively-owned
         # blocks; padding past the table lands in the null block.
         C = self.prefill_chunk
         trow = self._dev(self.tables[slot:slot + 1])
-        start = n_shared * BS
+        start = len(ids_shared) * BS
         logits = None
         for c0 in range(start, plen, C):
-            chunk = req.tokens[c0:c0 + C]
+            chunk = ctx[c0:c0 + C]
             buf = np.zeros((1, C), np.int32)
             buf[0, :len(chunk)] = chunk
             with self._mesh_ctx():
@@ -463,19 +582,42 @@ class Engine:
                 # scores it against (the schedule covers the padded
                 # chunk end c0+C-1, exactly what _blocks_used saw)
                 self.trace.record(
-                    "prefill", chunk, req.tokens[:c0 + len(chunk)],
+                    "prefill", chunk, ctx[:c0 + len(chunk)],
                     n_q_sched=C, n_kv_sched=self._sched_rows(c0 + C - 1))
             last_c0 = c0
-        tok = self._sample(logits[:, plen - 1 - last_c0],
-                           [req.temperature])[0]
-        req.output.append(int(tok))
+        if resume:
+            # a fully-cached resume context (start == plen) is legal
+            # here: no admission sample is drawn, so no logits needed
+            tok = req.output[-1]
+        else:
+            assert logits is not None      # cap guarantees start < plen
+            tok = int(self._sample(logits[:, plen - 1 - last_c0],
+                                   [req])[0])
+            req.output.append(tok)
+            if self.on_token:
+                self.on_token(req, tok)
         self.slot_req[slot] = req
         self.pos[slot] = plen
-        self.last_tok[slot] = int(tok)
+        self.last_tok[slot] = tok
         return slot
 
     def _evict(self, slot: int):
-        """Free the slot (paged: return blocks to the allocator)."""
+        """Free the slot (paged: return blocks to the allocator). With
+        the radix cache attached, the sequence's fully-written whole
+        blocks are first inserted (pinned) into the tree, so the prefix
+        outlives the request for future admissions to fork."""
+        req = self.slot_req[slot]
+        if self.radix is not None and req is not None \
+                and self.seq_blocks[slot] is not None:
+            # positions written so far: the prompt plus every generated
+            # token except the last (sampled but never fed back)
+            written = req.tokens + req.output[:-1] if req.output \
+                else req.tokens
+            ids = self.seq_blocks[slot].ids
+            n_full = min(len(written) // self.block_size, len(ids))
+            if n_full:
+                self.radix.insert(written[:n_full * self.block_size],
+                                  ids[:n_full])
         self.slot_req[slot] = None
         self.pos[slot] = 0
         self.last_tok[slot] = 0
@@ -484,6 +626,21 @@ class Engine:
             self.seq_blocks[slot] = None
             self.tables[slot, :] = 0
             self._tables_dev = None
+
+    def preempt(self, slot: int) -> Request:
+        """Evict-to-queue: release the slot's blocks (radix keeps the
+        written prefix pinned when attached) and hand the request back
+        to the scheduler marked ``finish_reason="preempted"`` —
+        re-``admit`` resumes it losslessly (greedy continuation is
+        bit-identical: cache rows are rebuilt from the same prefix,
+        forked or recomputed)."""
+        req = self.slot_req[slot]
+        if req is None or req.done:
+            raise ValueError(f"slot {slot} holds no preemptible request")
+        req.finish_reason = "preempted"
+        self.preemptions += 1
+        self._evict(slot)
+        return req
 
     # -------------------------------------------------------------- tick
     def _sched_rows(self, last_pos: int) -> int:
@@ -509,18 +666,27 @@ class Engine:
         return self._dev(np.clip(used, 1, self.blocks_per_seq)
                          .astype(np.int32))
 
-    def _sample(self, logits, temps) -> np.ndarray:
-        """Next token per row: greedy where ``temps[i] == 0``, else
-        categorical over ``logits / temp`` — deterministic under the
-        engine seed (one RNG split per sampling call either way)."""
-        self.rng, k = jax.random.split(self.rng)
+    def _sample(self, logits, reqs) -> np.ndarray:
+        """Next token per row: greedy where the row's temperature is 0,
+        else categorical over ``logits / temp``. The categorical key is
+        **per slot**: ``fold_in(fold_in(base, rid), token_index)`` — a
+        request's sampled tokens depend only on (engine seed, rid, how
+        many tokens it has sampled), never on which other requests are
+        co-scheduled or in what order admission happened. Solo ==
+        batched == resumed-after-preemption, reproducibly."""
         greedy = jnp.argmax(logits, axis=-1)
-        t = np.asarray(temps, np.float32)
+        t = np.asarray([0.0 if r is None else r.temperature
+                        for r in reqs], np.float32)
         if not (t > 0).any():
             return np.asarray(greedy, np.int32)
+        keys = jnp.stack([
+            jax.random.fold_in(jax.random.fold_in(self._base_key, r.rid),
+                               len(r.output))
+            if r is not None and r.temperature > 0 else self._base_key
+            for r in reqs])
         tj = jnp.asarray(t)
         safe = jnp.where(tj > 0, tj, 1.0)[:, None]
-        drawn = jax.random.categorical(k, logits / safe, axis=-1)
+        drawn = jax.vmap(jax.random.categorical)(keys, logits / safe)
         return np.asarray(jnp.where(tj > 0, drawn, greedy), np.int32)
 
     def tick(self):
@@ -552,8 +718,7 @@ class Engine:
             with self._mesh_ctx():
                 logits, self.cache = self._decode(self.params, self.cache,
                                                   toks, pos)
-        nxt = self._sample(logits, [0.0 if r is None else r.temperature
-                                    for r in self.slot_req])
+        nxt = self._sample(logits, self.slot_req)
         self.ticks += 1
         for s, req in enumerate(self.slot_req):
             if req is None:
@@ -562,6 +727,8 @@ class Engine:
             tok = int(nxt[s])
             req.output.append(tok)
             self.last_tok[s] = tok
+            if self.on_token:
+                self.on_token(req, tok)
             if req.eos_id is not None and tok == req.eos_id:
                 req.finish_reason = "eos"
             elif len(req.output) >= req.max_new_tokens:
@@ -573,17 +740,17 @@ class Engine:
             if req.finish_reason is not None:
                 req.done = True
                 self._evict(s)
+                if self.on_finish:
+                    self.on_finish(req)
 
     # --------------------------------------------------------------- run
     def run(self, requests: list[Request], max_ticks: int = 10_000
             ) -> list[Request]:
-        """Continuous batching: admit when slots free, tick until done."""
+        """Continuous batching: admit whatever fits when slots free
+        (``admit_from`` scans past a blocked head), tick until done."""
         pending = list(requests)
         for _ in range(max_ticks):
-            while pending and self._free_slot() is not None:
-                if not self.admit(pending[0]):
-                    break
-                pending.pop(0)
+            self.admit_from(pending)
             if not pending and all(r is None for r in self.slot_req):
                 break
             self.tick()

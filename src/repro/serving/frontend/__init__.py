@@ -1,0 +1,21 @@
+"""Async continuous-batching serving front end.
+
+Four pieces over the sync ``serving.Engine``:
+
+* ``async_engine`` — thread-pumped asyncio layer; ``submit`` returns a
+  token stream, admission/eviction run every tick.
+* ``scheduler`` — FIFO baseline + the SLO-aware priority/deadline
+  scheduler with evict-to-queue preemption.
+* ``radix_cache`` — radix-tree prefix cache over historical requests
+  (pinned refcounted blocks, LRU eviction).
+* ``metrics`` — TTFT / inter-token / queue-wait accounting + gauges.
+"""
+from repro.serving.frontend.async_engine import AsyncEngine, TokenStream
+from repro.serving.frontend.metrics import RequestMetrics, ServingMetrics
+from repro.serving.frontend.radix_cache import RadixCache
+from repro.serving.frontend.scheduler import (FIFOScheduler, SLOScheduler,
+                                              StepReport, Ticket)
+
+__all__ = ["AsyncEngine", "TokenStream", "RequestMetrics",
+           "ServingMetrics", "RadixCache", "FIFOScheduler",
+           "SLOScheduler", "StepReport", "Ticket"]

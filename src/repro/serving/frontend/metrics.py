@@ -1,0 +1,176 @@
+"""Serving metrics: per-request latency accounting + engine gauges.
+
+The async front end is only worth having if its latency story is
+measurable: TTFT (time to first token — the SLO the scheduler trades
+on), inter-token latency, queue wait, and preemption counts per
+request, plus engine-level gauges sampled every tick (active slots,
+free blocks, radix-cache residency/hit rate). Everything is plain host
+floats fed by the engine's ``on_token``/``on_finish`` hooks and the
+scheduler's step report — the jitted serving path is untouched.
+
+``snapshot()`` exports one JSON-able dict (``launch/serve.py`` prints
+it; ``benchmarks/serving_async.py`` gates on it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Wall-clock milestones of one request (absolute seconds on the
+    injected clock; derived durations via the properties)."""
+    rid: int
+    submitted: float
+    admitted: float | None = None      # first admission
+    first_token: float | None = None
+    finished: float | None = None
+    finish_reason: str | None = None
+    tokens: int = 0
+    preemptions: int = 0
+    token_times: list[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def ttft(self) -> float | None:
+        """Submit -> first streamed token (the SLO quantity)."""
+        if self.first_token is None:
+            return None
+        return self.first_token - self.submitted
+
+    @property
+    def queue_wait(self) -> float | None:
+        """Submit -> first admission (pure scheduler delay)."""
+        if self.admitted is None:
+            return None
+        return self.admitted - self.submitted
+
+    @property
+    def inter_token(self) -> list[float]:
+        """Gaps between consecutive streamed tokens (preemption gaps
+        included — that is the latency the client actually sees)."""
+        tt = self.token_times
+        return [b - a for a, b in zip(tt, tt[1:], strict=False)]
+
+
+def _percentile(values: list[float], q: float) -> float | None:
+    """Nearest-rank percentile (q in [0, 100]); None on empty input.
+    Stdlib-only so ``check_regression``-adjacent tooling can import
+    this module without jax/numpy."""
+    if not values:
+        return None
+    v = sorted(values)
+    idx = min(len(v) - 1, max(0, round(q / 100.0 * (len(v) - 1))))
+    return v[idx]
+
+
+class ServingMetrics:
+    """Aggregator: one ``RequestMetrics`` per rid + engine gauges.
+
+    ``clock`` is injectable for deterministic tests; production uses
+    ``time.monotonic``.
+    """
+
+    def __init__(self, clock=time.monotonic):
+        self.clock = clock
+        self.requests: dict[int, RequestMetrics] = {}
+        self.preemptions = 0           # engine-wide counter
+        self.ticks = 0
+        # gauge aggregates (sampled per tick)
+        self._active_sum = 0
+        self._active_max = 0
+        self._free_blocks_last = None
+        self._pinned_last = None
+
+    # ----------------------------------------------------------- events
+    def submitted(self, rid: int) -> RequestMetrics:
+        m = RequestMetrics(rid=rid, submitted=self.clock())
+        self.requests[rid] = m
+        return m
+
+    def admitted(self, rid: int):
+        m = self.requests.get(rid)
+        if m is not None and m.admitted is None:
+            m.admitted = self.clock()
+
+    def token(self, rid: int):
+        m = self.requests.get(rid)
+        if m is None:
+            return
+        now = self.clock()
+        if m.first_token is None:
+            m.first_token = now
+        m.tokens += 1
+        m.token_times.append(now)
+
+    def preempted(self, rid: int):
+        self.preemptions += 1
+        m = self.requests.get(rid)
+        if m is not None:
+            m.preemptions += 1
+
+    def finished(self, rid: int, reason: str | None):
+        m = self.requests.get(rid)
+        if m is not None:
+            m.finished = self.clock()
+            m.finish_reason = reason
+
+    def tick_gauges(self, engine):
+        """Sample engine-level gauges after one tick."""
+        self.ticks += 1
+        active = sum(r is not None for r in engine.slot_req)
+        self._active_sum += active
+        self._active_max = max(self._active_max, active)
+        if engine.paged:
+            self._free_blocks_last = engine.allocator.num_free
+            self._pinned_last = engine.allocator.num_pinned
+
+    # ---------------------------------------------------------- exports
+    def snapshot(self, engine=None) -> dict:
+        """One JSON-able dict: latency percentiles (seconds), totals,
+        and the latest gauges (plus radix stats when the engine has the
+        cache attached)."""
+        done = [m for m in self.requests.values()
+                if m.finished is not None]
+        ttfts = [m.ttft for m in done if m.ttft is not None]
+        waits = [m.queue_wait for m in done if m.queue_wait is not None]
+        itls = [g for m in done for g in m.inter_token]
+        out = {
+            "requests": {
+                "submitted": len(self.requests),
+                "finished": len(done),
+                "preemptions": self.preemptions,
+                "tokens": sum(m.tokens for m in self.requests.values()),
+            },
+            "ttft_s": {
+                "p50": _percentile(ttfts, 50),
+                "p99": _percentile(ttfts, 99),
+                "max": max(ttfts) if ttfts else None,
+            },
+            "inter_token_s": {
+                "p50": _percentile(itls, 50),
+                "p99": _percentile(itls, 99),
+            },
+            "queue_wait_s": {
+                "p50": _percentile(waits, 50),
+                "p99": _percentile(waits, 99),
+            },
+            "requests_detail": [
+                {"rid": m.rid, "ttft_s": m.ttft,
+                 "queue_wait_s": m.queue_wait, "tokens": m.tokens,
+                 "preemptions": m.preemptions,
+                 "finish_reason": m.finish_reason}
+                for m in sorted(self.requests.values(),
+                                key=lambda m: m.rid)],
+            "gauges": {
+                "ticks": self.ticks,
+                "active_mean": (self._active_sum / self.ticks
+                                if self.ticks else 0.0),
+                "active_max": self._active_max,
+                "free_blocks": self._free_blocks_last,
+                "pinned_blocks": self._pinned_last,
+            },
+        }
+        if engine is not None and getattr(engine, "radix", None) is not None:
+            out["radix"] = engine.radix.stats()
+        return out

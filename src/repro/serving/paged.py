@@ -73,6 +73,7 @@ class BlockAllocator:
         self.block_size = block_size
         self._free: list[int] = list(range(num_blocks - 1, 0, -1))
         self._ref = [0] * num_blocks
+        self._pin = [0] * num_blocks
 
     # ------------------------------------------------------------ queries
     @property
@@ -84,8 +85,22 @@ class BlockAllocator:
         """Allocatable blocks (pool minus the null block)."""
         return self.num_blocks - 1
 
+    @property
+    def num_live(self) -> int:
+        """Blocks currently referenced (the conservation invariant is
+        ``num_free + num_live == num_usable``)."""
+        return sum(1 for r in self._ref[1:] if r > 0)
+
+    @property
+    def num_pinned(self) -> int:
+        """Blocks currently carrying >= 1 cache pin."""
+        return sum(1 for p in self._pin[1:] if p > 0)
+
     def refcount(self, bid: int) -> int:
         return self._ref[bid]
+
+    def pincount(self, bid: int) -> int:
+        return self._pin[bid]
 
     # ------------------------------------------------------------- verbs
     def alloc(self, n: int) -> list[int] | None:
@@ -115,6 +130,29 @@ class BlockAllocator:
             self._ref[b] -= 1
             if self._ref[b] == 0:
                 self._free.append(b)
+
+    def pin(self, ids: Sequence[int]) -> None:
+        """Take a named cache reference on live blocks (the radix
+        prefix cache holding a historical prefix resident). A pin is a
+        refcount like any other — it keeps the block off the free list
+        — but is tracked separately so the gauge ``num_pinned`` and the
+        stateful-test invariants can tell cache residency from
+        sequence ownership."""
+        for b in ids:
+            if self._ref[b] <= 0:
+                raise ValueError(f"pin of unallocated block {b}")
+            self._ref[b] += 1
+            self._pin[b] += 1
+
+    def unpin(self, ids: Sequence[int]) -> None:
+        """Drop a cache reference (LRU eviction / cache clear). The
+        block returns to the free list only when *all* references —
+        pins and sequence forks alike — are gone."""
+        for b in ids:
+            if self._pin[b] <= 0:
+                raise ValueError(f"unpin of unpinned block {b}")
+            self._pin[b] -= 1
+        self.free(ids)
 
     def ensure_exclusive(self, bid: int,
                          copy_block: Callable[[int, int], None]

@@ -5,7 +5,13 @@ it) so property-based tests still *run* — over a fixed pseudo-random
 sample of the strategy space instead of hypothesis' adaptive search.
 Only the surface this suite uses is implemented: ``given`` (positional
 or keyword strategies), ``settings(max_examples=..., deadline=...)``,
-and ``strategies.integers/floats/text``.
+``strategies.integers/floats/text/sampled_from``, and the stateful
+subset (``RuleBasedStateMachine`` / ``rule`` / ``invariant`` /
+``run_state_machine_as_test``) as a seeded random walk: each run
+executes ``STATEFUL_RUNS`` fresh machines of up to
+``stateful_step_count`` random rule applications, checking every
+``@invariant`` after setup and after each step — the same contract the
+real engine enforces, minus shrinking.
 """
 from __future__ import annotations
 
@@ -42,12 +48,26 @@ class strategies:
             return "".join(rng.choice(chars) for _ in range(n))
         return _Strategy(draw)
 
+    @staticmethod
+    def sampled_from(elements):
+        pool = list(elements)
+        return _Strategy(lambda rng: rng.choice(pool))
 
-def settings(max_examples=None, **_ignored):
-    def deco(fn):
-        fn._fallback_max_examples = max_examples
+
+class settings:
+    """Decorator (``@settings(...)`` on a ``@given`` test) and plain
+    options object (``run_state_machine_as_test(M, settings=...)``) —
+    the same dual role the real class plays."""
+
+    def __init__(self, max_examples=None, stateful_step_count=None,
+                 **_ignored):
+        self.max_examples = max_examples
+        self.stateful_step_count = stateful_step_count
+
+    def __call__(self, fn):
+        fn._fallback_max_examples = self.max_examples
+        fn._fallback_step_count = self.stateful_step_count
         return fn
-    return deco
 
 
 def given(*arg_strats, **kw_strats):
@@ -68,3 +88,80 @@ def given(*arg_strats, **kw_strats):
         wrapper.__signature__ = inspect.Signature()
         return wrapper
     return deco
+
+
+# --------------------------------------------------------------- stateful
+
+STATEFUL_RUNS = 10            # fresh machines per test
+STATEFUL_STEPS = 30           # random rule applications per machine
+
+
+def rule(**kw_strats):
+    """Mark a method as a state-transition rule; kwargs are strategies
+    drawn fresh per application (mirrors ``hypothesis.stateful.rule``)."""
+    def deco(fn):
+        fn._fallback_rule_strats = kw_strats
+        return fn
+    return deco
+
+
+def invariant():
+    """Mark a method as an invariant, checked after setup and after
+    every rule application."""
+    def deco(fn):
+        fn._fallback_invariant = True
+        return fn
+    return deco
+
+
+class RuleBasedStateMachine:
+    """Base class; subclasses define ``@rule``/``@invariant`` methods
+    (and optionally ``teardown``)."""
+
+    def teardown(self):
+        pass
+
+    @classmethod
+    def _fallback_rules(cls):
+        return [m for _, m in inspect.getmembers(cls, inspect.isfunction)
+                if hasattr(m, "_fallback_rule_strats")]
+
+    @classmethod
+    def _fallback_invariants(cls):
+        return [m for _, m in inspect.getmembers(cls, inspect.isfunction)
+                if getattr(m, "_fallback_invariant", False)]
+
+
+def run_state_machine_as_test(machine_cls, settings=None):
+    """Seeded random walk over the machine's rules. A failing rule or
+    invariant raises with the replayable step trace attached."""
+    runs = getattr(settings, "max_examples", None) or STATEFUL_RUNS
+    steps = getattr(settings, "stateful_step_count", None) \
+        or STATEFUL_STEPS
+    rules = machine_cls._fallback_rules()
+    invariants = machine_cls._fallback_invariants()
+    if not rules:
+        raise TypeError(f"{machine_cls.__name__} defines no @rule")
+    rng = random.Random(4321)
+    for run in range(runs):
+        machine = machine_cls()
+        trace = []
+        try:
+            for fn in invariants:
+                fn(machine)
+            for _ in range(steps):
+                fn = rng.choice(rules)
+                kw = {k: s.draw(rng)
+                      for k, s in fn._fallback_rule_strats.items()}
+                trace.append((fn.__name__, kw))
+                fn(machine, **kw)
+                for inv in invariants:
+                    inv(machine)
+        except Exception as e:
+            lines = "\n".join(f"  {i}. {name}({kw})"
+                              for i, (name, kw) in enumerate(trace))
+            raise AssertionError(
+                f"state machine failed on run {run} after "
+                f"{len(trace)} step(s):\n{lines}") from e
+        finally:
+            machine.teardown()

@@ -441,3 +441,174 @@ def test_prefix_sharing_correctness_and_reuse(setup):
     for a, b in zip(rs, rp, strict=True):
         assert a.done and a.output == b.output
     assert shared.allocator.num_free == shared.allocator.num_usable
+
+
+# --------------------------------------------- admission queue scanning
+
+def test_admission_scans_past_blocked_head(setup):
+    """Head-of-line fix: a pending head too big for the current pool
+    must not starve a smaller request behind it — ``admit_from`` scans
+    the queue (bounded by ``admit_scan``) and admits whatever fits."""
+    model, params = setup
+
+    def mk(admit_scan=8):
+        eng = Engine(model, params, max_slots=2, max_len=64, paged=True,
+                     block_size=8, num_blocks=6, prefill_chunk=16,
+                     admit_scan=admit_scan)
+        hog = Request(rid=0, tokens=[1] + list(range(5, 21)),
+                      max_new_tokens=8)        # 4 of the 5 blocks
+        assert eng.admit(hog)
+        head = Request(rid=1, tokens=[1] + list(range(30, 38)),
+                       max_new_tokens=8)       # needs 3: blocked
+        small = Request(rid=2, tokens=[1, 5, 6], max_new_tokens=4)
+        return eng, hog, head, small
+
+    eng, hog, head, small = mk()
+    pending = [head, small]
+    assert eng.admit_from(pending) == 1
+    assert pending == [head] and eng.slot_req.count(None) == 0
+
+    # run() drains everything: head admitted once the hog finishes
+    eng.run(pending)
+    for r in (hog, head, small):
+        assert r.done and r.finish_reason == "length"
+
+    # the scan bound is honored: admit_scan=1 is the old head-only rule
+    eng, hog, head, small = mk(admit_scan=1)
+    pending = [head, small]
+    assert eng.admit_from(pending) == 0
+    assert pending == [head, small]
+
+
+def test_temperature_sampling_slot_independent(setup):
+    """Per-slot rid-keyed sampling: a temperature>0 request draws the
+    same tokens whether it runs solo or co-batched with strangers —
+    the property that keeps async admission reordering reproducible."""
+    model, params = setup
+
+    def engine():
+        return Engine(model, params, max_slots=4, max_len=64, paged=True,
+                      block_size=8, prefill_chunk=16, rng_seed=11)
+
+    def mk(rid, seed, temp=0.9):
+        rng = np.random.default_rng(seed)
+        return Request(rid=rid, tokens=[1] + rng.integers(3, 500, 8).tolist(),
+                       max_new_tokens=8, temperature=temp)
+
+    solo = mk(5, seed=5)
+    engine().run([solo])
+    batched = mk(5, seed=5)
+    others = [mk(i, seed=i) for i in (0, 1, 2)]
+    engine().run(others + [batched])
+    assert solo.output == batched.output
+    # sanity: co-batched strangers drew per-slot streams, not copies
+    assert len({tuple(r.output) for r in others}) == len(others)
+
+
+# ------------------------------------------- allocator stateful fuzzing
+
+try:
+    from hypothesis import settings as h_settings, strategies as h_st
+    from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                     rule, run_state_machine_as_test)
+except ImportError:                       # CI container has no hypothesis
+    from _hypothesis_fallback import (RuleBasedStateMachine, invariant,
+                                      rule, run_state_machine_as_test,
+                                      settings as h_settings,
+                                      strategies as h_st)
+
+
+class AllocatorMachine(RuleBasedStateMachine):
+    """Adversarial alloc/fork/free/pin/unpin/ensure_exclusive
+    interleavings against a reference model of who holds which block
+    reference. Invariants after every step: refcounts exactly equal
+    the model's reference multiset (never negative), conservation
+    ``num_free + num_live == num_usable``, and copy-on-write never
+    leaves one block exclusively owned by two holders."""
+
+    def __init__(self):
+        super().__init__()
+        self.a = BlockAllocator(num_blocks=10, block_size=4)
+        self.refs: list[int] = []      # one entry per sequence ref held
+        self.pins: list[int] = []      # one entry per cache pin held
+
+    @rule(n=h_st.integers(min_value=1, max_value=4))
+    def alloc(self, n):
+        ids = self.a.alloc(n)
+        if ids is None:
+            assert self.a.num_free < n       # all-or-nothing
+        else:
+            assert len(set(ids)) == n and NULL_BLOCK not in ids
+            assert all(self.a.refcount(b) == 1 for b in ids)
+            self.refs.extend(ids)
+
+    @rule(i=h_st.integers(min_value=0, max_value=10 ** 6))
+    def fork(self, i):
+        if not self.refs:
+            return
+        bid = self.refs[i % len(self.refs)]
+        assert self.a.fork([bid]) == [bid]
+        self.refs.append(bid)
+
+    @rule(i=h_st.integers(min_value=0, max_value=10 ** 6))
+    def free(self, i):
+        if not self.refs:
+            return
+        self.a.free([self.refs.pop(i % len(self.refs))])
+
+    @rule(i=h_st.integers(min_value=0, max_value=10 ** 6))
+    def pin(self, i):
+        if not self.refs:
+            return
+        bid = self.refs[i % len(self.refs)]
+        self.a.pin([bid])
+        self.pins.append(bid)
+
+    @rule(i=h_st.integers(min_value=0, max_value=10 ** 6))
+    def unpin(self, i):
+        if not self.pins:
+            return
+        self.a.unpin([self.pins.pop(i % len(self.pins))])
+
+    @rule(i=h_st.integers(min_value=0, max_value=10 ** 6))
+    def cow(self, i):
+        if not self.refs:
+            return
+        idx = i % len(self.refs)
+        bid = self.refs[idx]
+        was_shared = self.a.refcount(bid) > 1
+        copies = []
+        got = self.a.ensure_exclusive(bid,
+                                      lambda s, d: copies.append((s, d)))
+        if got is None:                      # pool exhausted mid-CoW
+            assert was_shared and self.a.num_free == 0
+            return                           # our ref on bid survives
+        self.refs[idx] = got
+        if was_shared:
+            # exclusivity: the writer got a fresh private block — no
+            # block is ever exclusively owned by two holders
+            assert got != bid and copies == [(bid, got)]
+        else:
+            assert got == bid and copies == []
+        assert self.a.refcount(got) == 1
+
+    @invariant()
+    def refcounts_match_reference_model(self):
+        held = {}
+        for b in self.refs + self.pins:
+            held[b] = held.get(b, 0) + 1
+        for bid in range(1, self.a.num_blocks):
+            assert self.a.refcount(bid) == held.get(bid, 0) >= 0
+            assert self.a.pincount(bid) == self.pins.count(bid)
+        assert self.a.refcount(NULL_BLOCK) == 0
+
+    @invariant()
+    def conservation(self):
+        a = self.a
+        assert a.num_free + a.num_live == a.num_usable
+
+
+def test_allocator_stateful_invariants():
+    run_state_machine_as_test(
+        AllocatorMachine,
+        settings=h_settings(max_examples=12, stateful_step_count=60))
