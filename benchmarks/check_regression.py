@@ -56,6 +56,12 @@ equal Poisson load, the SLO scheduler must beat FIFO on high-priority
 p99 TTFT (with at least one preemption observed), the radix prefix
 cache must hit >=50% of offered blocks on the shared-system-prompt
 trace, and async greedy outputs must equal the sync engine's.
+``BENCH_router.json``'s ``router`` section (benchmarks/serving_router):
+data-parallel aggregate throughput on modeled-concurrent time must
+scale >=1.7x at 2 replicas with routed greedy outputs equal to the
+single-engine oracle, and the disaggregated replica must keep the
+residents' p99 inter-token gap >=2x below fused under long-prompt
+interference with bit-identical outputs.
 """
 from __future__ import annotations
 
@@ -92,6 +98,12 @@ FLOORS = {
         ("slo", "slo_preempted", "==", True),
         ("radix", "hit_rate", ">=", 0.5),
         ("parity", "outputs_equal", "==", True),
+    ],
+    "router": [
+        ("scale", "throughput_scaling_2rep", ">=", 1.7),
+        ("scale", "outputs_equal", "==", True),
+        ("isolation", "p99_gap_ratio", ">=", 2.0),
+        ("isolation", "disagg_outputs_equal", "==", True),
     ],
 }
 

@@ -113,6 +113,25 @@ def main():
                          "DxM visible devices — on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N "
                          "before launching")
+    ap.add_argument("--router", action="store_true",
+                    help="data-parallel replica routing: one engine per "
+                         "data-axis index of --mesh (weights replicated "
+                         "per replica, sharded over each replica's model "
+                         "axis); requests spread under --router-policy. "
+                         "Requires --mesh with data>=1 and paged mode")
+    ap.add_argument("--router-policy", default="least_loaded",
+                    choices=("least_loaded", "radix_affinity",
+                             "round_robin"),
+                    help="--router placement policy (see "
+                         "serving.router.policies)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="--router: split every replica into a prefill "
+                         "worker and a decode worker with paged-block "
+                         "handoff — a long prompt costs decode at most "
+                         "one chunk of interference per router step")
+    ap.add_argument("--prefill-slots", type=int, default=2,
+                    help="--disaggregate: concurrent prefill-worker "
+                         "slots per replica")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for all requests "
                          "(0 = greedy; >0 = categorical, seeded)")
@@ -173,16 +192,36 @@ def main():
         print(f"[serve] mesh {args.mesh}: data={mesh.shape['data']} x "
               f"model={mesh.shape['model']} over "
               f"{mesh.devices.size} device(s)")
-    eng = Engine(model, params, max_slots=args.slots,
-                 max_len=args.max_len, paged=args.paged,
-                 block_size=args.block_size, hbm_bytes=hbm,
-                 prefill_chunk=args.prefill_chunk,
-                 prefix_sharing=not args.no_prefix_sharing,
-                 decode_schedule=args.decode_schedule,
-                 mesh=mesh,
-                 radix_cache=args.radix_cache,
-                 capture_trace=args.sim_trace is not None)
-    if eng.plan is not None:
+    engine_kw = dict(max_slots=args.slots, max_len=args.max_len,
+                     paged=args.paged, block_size=args.block_size,
+                     hbm_bytes=hbm, prefill_chunk=args.prefill_chunk,
+                     prefix_sharing=not args.no_prefix_sharing,
+                     decode_schedule=args.decode_schedule,
+                     radix_cache=args.radix_cache)
+    if args.router:
+        if mesh is None:
+            ap.error("--router requires --mesh DxM (data axis = "
+                     "replica count)")
+        if args.sim_trace:
+            ap.error("--sim-trace captures a single engine; drop "
+                     "--router")
+        from repro.serving.router import ReplicaRouter
+        eng = ReplicaRouter.for_mesh(
+            model, params, mesh, policy=args.router_policy,
+            disaggregate=args.disaggregate,
+            prefill_slots=args.prefill_slots, **engine_kw)
+        e0 = eng.engines[0]
+        print(f"[serve] router: {len(eng.replicas)} "
+              f"{'disaggregated' if args.disaggregate else 'fused'} "
+              f"replica(s), policy {args.router_policy!r}; "
+              f"{eng.allocator.num_usable} usable blocks fleet-wide "
+              f"x {e0.block_size} tokens; chunked prefill "
+              f"C={e0.prefill_chunk}")
+    else:
+        eng = Engine(model, params, mesh=mesh,
+                     capture_trace=args.sim_trace is not None,
+                     **engine_kw)
+    if not args.router and eng.plan is not None:
         budget = kvcache.budget_for(cfg)
         print(f"[serve] score backend {eng.plan.backend.name!r} "
               f"({'blockwise' if eng.plan.blockwise else 'quadratic'}); "
@@ -190,7 +229,7 @@ def main():
               f"{budget.bytes_per_token} B/token; "
               f"{budget.max_tokens(16 << 30):,} tokens per 16 GB chip")
         print(f"[serve] plan: {eng.plan.reason}")
-    if eng.paged:
+    if not args.router and eng.paged:
         pb = kvcache.paged_budget_for(cfg, args.block_size)
         print(f"[serve] paged cache: {eng.allocator.num_usable} usable "
               f"blocks x {args.block_size} tokens "
@@ -203,7 +242,7 @@ def main():
                   f"{'head-sharded' if eng.pool_sharded else 'replicated'}"
                   f" on the model axis; "
                   f"{eng.pool_bytes_per_device():,} B/device")
-    else:
+    elif not args.router:
         print("[serve] dense cache pool "
               f"[{args.slots} slots x {args.max_len} tokens]")
     rng = np.random.default_rng(0)

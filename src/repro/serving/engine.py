@@ -145,6 +145,105 @@ class NonDividingShardWarning(UserWarning):
 _NONDIV_WARNED: set = set()
 
 
+@dataclasses.dataclass
+class PrefillJob:
+    """One request's chunked prefill, advanced one chunk per ``step()``.
+
+    ``Engine.begin_prefill`` reserves the slot and blocks up front and
+    returns the job; the fused ``admit`` path drives it to completion
+    synchronously (bit-identical to the old inline loop), while the
+    disaggregated prefill worker (``serving/router/disagg.py``) advances
+    one chunk per router step so a long prompt never stalls a
+    co-resident decode tick. While in flight the slot is *held* —
+    ``slot_req`` stays None (ticks skip it) but ``_free_slot`` won't
+    hand it out. ``step()`` returns True once the slot is live: the
+    admission token is sampled (fresh) or carried (resume) and
+    ``slot_req``/``pos``/``last_tok`` are set.
+    """
+    engine: "Engine"
+    req: Request
+    slot: int
+    ctx: list[int]
+    resume: bool
+    c0: int                      # next chunk offset (block-aligned)
+    plen: int
+    trow: object                 # device copy of this slot's table row
+    logits: object = None        # last chunk's logits (admission sample)
+    last_c0: int = 0
+    done: bool = False
+
+    def chunks_left(self) -> int:
+        if self.done or self.c0 >= self.plen:
+            return 0
+        return -(-(self.plen - self.c0) // self.engine.prefill_chunk)
+
+    def step(self) -> bool:
+        """Run one prefill chunk; the final chunk also finalizes the
+        slot (a fully-cached resume finalizes with no chunk at all).
+        Returns True when the job is done."""
+        if self.done:
+            return True
+        eng = self.engine
+        if self.c0 < self.plen:
+            C = eng.prefill_chunk
+            c0 = self.c0
+            chunk = self.ctx[c0:c0 + C]
+            buf = np.zeros((1, C), np.int32)
+            buf[0, :len(chunk)] = chunk
+            with eng._mesh_ctx():
+                self.logits, eng.pool = eng._decode_paged(
+                    eng.params, eng.pool, self.trow, eng._dev(buf),
+                    eng._dev(np.asarray([c0], np.int32)),
+                    eng._blocks_used(np.asarray([c0 + C - 1])))
+            if eng.trace is not None:
+                # queries: this chunk; keys: every position the graph
+                # scores it against (the schedule covers the padded
+                # chunk end c0+C-1, exactly what _blocks_used saw)
+                eng.trace.record(
+                    "prefill", chunk, self.ctx[:c0 + len(chunk)],
+                    n_q_sched=C, n_kv_sched=eng._sched_rows(c0 + C - 1))
+            self.last_c0 = c0
+            self.c0 = c0 + C
+            if self.c0 < self.plen:
+                return False
+        self._finalize()
+        return True
+
+    def _finalize(self):
+        eng, req = self.engine, self.req
+        if self.resume:
+            # a fully-cached resume context (no chunks run) is legal:
+            # no admission sample is drawn, so no logits needed
+            tok = req.output[-1]
+        else:
+            assert self.logits is not None   # cap guarantees >= 1 chunk
+            tok = int(eng._sample(
+                self.logits[:, self.plen - 1 - self.last_c0], [req])[0])
+            req.output.append(tok)
+            if eng.on_token:
+                eng.on_token(req, tok)
+        del eng._prefilling[self.slot]
+        eng.slot_req[self.slot] = req
+        eng.pos[self.slot] = self.plen
+        eng.last_tok[self.slot] = tok
+        self.done = True
+
+    def cancel(self):
+        """Abandon an in-flight job: release its blocks and slot. The
+        request keeps whatever output it had (none for fresh
+        admissions), so a later re-admission replays the identical
+        prefill from scratch."""
+        if self.done:
+            raise ValueError("job already finalized; preempt the slot")
+        eng = self.engine
+        del eng._prefilling[self.slot]
+        eng.allocator.free(eng.seq_blocks[self.slot].ids)
+        eng.seq_blocks[self.slot] = None
+        eng.tables[self.slot, :] = 0
+        eng._tables_dev = None
+        self.done = True
+
+
 class Engine:
     def __init__(self, model, params, *, max_slots: int = 8,
                  max_len: int = 512, rng_seed: int = 0,
@@ -157,6 +256,7 @@ class Engine:
                  admit_scan: int = 8,
                  decode_schedule: str = "auto",
                  mesh=None,
+                 prefill_only: bool = False,
                  capture_trace: bool = False):
         self.model, self.params = model, params
         self.max_slots, self.max_len = max_slots, max_len
@@ -193,6 +293,17 @@ class Engine:
             raise ValueError(
                 f"paged cache unsupported for family {cfg.family!r}")
         self.paged = model.supports_paged() if paged is None else bool(paged)
+        # prefill worker mode (serving/router/disagg.py): this engine
+        # only builds cache blocks — admission reserves prompt blocks
+        # alone (the decode budget is reserved by the adopting decode
+        # engine), and tick() is forbidden
+        self.prefill_only = bool(prefill_only)
+        if self.prefill_only and not self.paged:
+            raise ValueError("prefill_only=True requires the paged cache "
+                             "(handoff moves pool blocks)")
+        # slots held by in-flight PrefillJobs: slot_req is still None
+        # (ticks skip them) but _free_slot won't hand them out
+        self._prefilling: dict[int, PrefillJob] = {}
         if radix_cache and not self.paged:
             raise ValueError("radix_cache=True requires the paged cache "
                              "(block ids are what the tree stores)")
@@ -292,15 +403,27 @@ class Engine:
                 # the pool keeps its shard layout across ticks
                 pool_sh = jax.tree_util.tree_map(lambda l: l.sharding,
                                                  self.pool)
+                # per-engine wrapper, NOT the bound method: jax's trace
+                # cache keys on function identity and bakes this mesh's
+                # sharding constraints into the jaxpr — two replicas
+                # jitting model.decode_paged directly would share one
+                # trace and cross-wire their device groups
+                def _decode_paged_fn(*a):
+                    return model.decode_paged(*a)
                 self._decode_paged = jax.jit(
-                    model.decode_paged,
+                    _decode_paged_fn,
                     out_shardings=(self._rep, pool_sh))
         else:
             self.decode_schedule = "gather"      # dense pool: no paging
             self.cache = model.init_cache(max_slots, max_len)
             if mesh is not None:
                 self.cache = jax.device_put(self.cache, self._rep)
-            self._decode = jax.jit(model.decode_step)
+            if mesh is None:
+                self._decode = jax.jit(model.decode_step)
+            else:
+                def _decode_step_fn(*a):   # same trace-isolation story
+                    return model.decode_step(*a)
+                self._decode = jax.jit(_decode_step_fn)
             self._prefills: dict[int, Callable] = {}
 
         # score-trace capture for the hardware simulator (repro.sim):
@@ -344,7 +467,7 @@ class Engine:
     # ---------------------------------------------------------- admission
     def _free_slot(self) -> int | None:
         for i, r in enumerate(self.slot_req):
-            if r is None:
+            if r is None and i not in self._prefilling:
                 return i
         return None
 
@@ -365,7 +488,10 @@ class Engine:
                 f"max_len {self.max_len} — can never be served; raise "
                 f"--max-len or truncate the prompt")
         if self.paged:
-            need = min(len(req.tokens) + req.max_new_tokens, self.max_len)
+            # a prefill-only worker reserves prompt blocks alone; the
+            # decode budget is the adopting engine's problem
+            need = ctx_len if self.prefill_only else \
+                min(len(req.tokens) + req.max_new_tokens, self.max_len)
             n_res = min(paged_lib.blocks_for(need, self.block_size),
                         self.blocks_per_seq)
             if n_res > self.allocator.num_usable:
@@ -393,17 +519,29 @@ class Engine:
         # cache context: every token whose row must exist before the
         # next decode tick feeds req.output[-1] (fresh: the prompt)
         ctx = req.tokens + req.output[:-1] if resume else req.tokens
-        slot = self._admit_paged(req, ctx, resume) if self.paged \
-            else self._admit_dense(req, ctx, resume)
-        if slot is None:
-            return False
+        if self.paged:
+            job = self.begin_prefill(req)
+            if job is None:
+                return False
+            while not job.step():       # fused: drive every chunk now
+                pass
+            slot = job.slot
+        else:
+            slot = self._admit_dense(req, ctx, resume)
+            if slot is None:
+                return False
+        return self._post_admit(req, slot, resume)
+
+    def _post_admit(self, req: Request, slot: int, resume: bool) -> bool:
+        """Admission epilogue once the slot is live: clear a resume's
+        "preempted" marker, or finish the request outright when the
+        admission-sampled token already completes it (max_new_tokens <=
+        1, or EOS straight out of prefill) instead of letting a tick
+        append a second token."""
         if resume:
             req.finish_reason = None        # clears "preempted"
             self._note_active()
             return True
-        # the admission-sampled token may already complete the request
-        # (max_new_tokens <= 1, or EOS straight out of prefill) — finish
-        # now instead of letting a tick append a second token
         tok = req.output[-1]
         if req.eos_id is not None and tok == req.eos_id:
             req.done, req.finish_reason = True, "eos"
@@ -412,6 +550,9 @@ class Engine:
             req.done, req.finish_reason = True, "length"
             self._evict(slot)
         else:
+            # a cancelled PrefillJob leaves "preempted" on an output-less
+            # request; clear it or the next tick reads it as a finish
+            req.finish_reason = None
             self._note_active()
         if req.done and self.on_finish:
             self.on_finish(req)
@@ -505,17 +646,31 @@ class Engine:
                 best_n, best_slot = n, s
         return best_n, best_slot
 
-    def _admit_paged(self, req: Request, ctx: list[int],
-                     resume: bool) -> int | None:
+    def begin_prefill(self, req: Request) -> PrefillJob | None:
+        """Reserve a slot and blocks for ``req`` and return a
+        ``PrefillJob`` that advances its chunked prefill one chunk per
+        ``step()`` call (None when no slot/blocks are available right
+        now — the request stays queued). The fused ``admit`` drives the
+        job to completion inline; the disaggregated prefill worker
+        interleaves ``step()`` with its decode sibling's ticks. Callers
+        other than ``admit`` must invoke ``_post_admit`` (or export the
+        sequence) once the job reports done."""
+        if not self.paged:
+            raise ValueError("begin_prefill requires the paged cache")
+        self.check_servable(req)
+        resume = bool(req.output)
+        ctx = req.tokens + req.output[:-1] if resume else req.tokens
         slot = self._free_slot()
         if slot is None:
             return None
         plen = len(ctx)
         BS = self.block_size
         # total reservation is arrival-invariant: resume re-reserves
-        # exactly what the fresh admission did (prompt + full budget)
-        need_tokens = min(len(req.tokens) + req.max_new_tokens,
-                          self.max_len)
+        # exactly what the fresh admission did (prompt + full budget).
+        # A prefill-only worker reserves just the prompt's blocks — the
+        # adopting decode engine reserves the full budget at handoff.
+        need_tokens = plen if self.prefill_only else \
+            min(len(req.tokens) + req.max_new_tokens, self.max_len)
         n_res = min(paged_lib.blocks_for(need_tokens, BS),
                     self.blocks_per_seq)
 
@@ -560,45 +715,110 @@ class Engine:
         self.tables[slot, :len(ids)] = ids
         self._tables_dev = None
 
-        # chunked prefill: stream the (unshared part of the) context in
-        # fixed-size chunks through the shared decode graph. Writes at
-        # block-aligned ``start`` onward touch only exclusively-owned
-        # blocks; padding past the table lands in the null block.
-        C = self.prefill_chunk
+        # chunked prefill streams the (unshared part of the) context in
+        # fixed-size chunks through the shared decode graph — one chunk
+        # per PrefillJob.step(). Writes at block-aligned ``start``
+        # onward touch only exclusively-owned blocks; padding past the
+        # table lands in the null block.
         trow = self._dev(self.tables[slot:slot + 1])
         start = len(ids_shared) * BS
-        logits = None
-        for c0 in range(start, plen, C):
-            chunk = ctx[c0:c0 + C]
-            buf = np.zeros((1, C), np.int32)
-            buf[0, :len(chunk)] = chunk
-            with self._mesh_ctx():
-                logits, self.pool = self._decode_paged(
-                    self.params, self.pool, trow, self._dev(buf),
-                    self._dev(np.asarray([c0], np.int32)),
-                    self._blocks_used(np.asarray([c0 + C - 1])))
-            if self.trace is not None:
-                # queries: this chunk; keys: every position the graph
-                # scores it against (the schedule covers the padded
-                # chunk end c0+C-1, exactly what _blocks_used saw)
-                self.trace.record(
-                    "prefill", chunk, ctx[:c0 + len(chunk)],
-                    n_q_sched=C, n_kv_sched=self._sched_rows(c0 + C - 1))
-            last_c0 = c0
-        if resume:
-            # a fully-cached resume context (start == plen) is legal
-            # here: no admission sample is drawn, so no logits needed
-            tok = req.output[-1]
+        job = PrefillJob(engine=self, req=req, slot=slot, ctx=ctx,
+                         resume=resume, c0=start, plen=plen, trow=trow)
+        self._prefilling[slot] = job
+        return job
+
+    # ----------------------------------------------------------- handoff
+    def _handoff_blocks(self, req: Request) -> int:
+        """Blocks a full (fused-equivalent) reservation for ``req``
+        takes — what ``adopt_sequence`` allocates so migration keeps
+        admission arrival-invariant."""
+        need = min(len(req.tokens) + req.max_new_tokens, self.max_len)
+        return min(paged_lib.blocks_for(need, self.block_size),
+                   self.blocks_per_seq)
+
+    def export_sequence(self, slot: int) -> paged_lib.SequenceHandoff:
+        """Package the live sequence in ``slot`` for adoption by
+        another engine (disaggregated prefill→decode handoff, or
+        cross-replica migration): a bit-copy of its written blocks plus
+        the scalar decode state, then a normal eviction — with the
+        radix cache attached the written prefix stays pinned on THIS
+        engine for future local admissions to fork."""
+        req = self.slot_req[slot]
+        if not self.paged or req is None:
+            raise ValueError(f"slot {slot} holds no exportable sequence")
+        pos = int(self.pos[slot])
+        ids = self.seq_blocks[slot].ids
+        # rows 0..pos-1 are written; later reserved blocks carry nothing
+        n_blk = min(paged_lib.blocks_for(pos, self.block_size), len(ids))
+        blob = paged_lib.export_blocks(self.pool, ids[:n_blk])
+        h = paged_lib.SequenceHandoff(
+            req=req, blob=blob, n_blocks=n_blk, pos=pos,
+            last_tok=int(self.last_tok[slot]), block_size=self.block_size)
+        self._evict(slot)
+        return h
+
+    def can_adopt(self, handoff: paged_lib.SequenceHandoff) -> bool:
+        """Whether ``adopt_sequence`` would succeed right now (a free
+        slot plus the full decode-budget blocks, LRU-evicting radix
+        prefixes if that's what it takes). The disagg worker checks
+        this BEFORE exporting so a sequence is never left floating
+        between engines."""
+        if not self.paged or self._free_slot() is None:
+            return False
+        n_res = max(self._handoff_blocks(handoff.req), handoff.n_blocks)
+        short = n_res - self.allocator.num_free
+        if short > 0 and self.radix is not None:
+            self.radix.evict(short)
+        return n_res <= self.allocator.num_free
+
+    def adopt_sequence(self, handoff: paged_lib.SequenceHandoff
+                       ) -> int | None:
+        """Install an exported sequence: reserve the full decode budget
+        (exactly what a fused admission would have reserved), bit-copy
+        the blob into fresh exclusively-owned blocks, splice the block
+        table, and continue decoding from the carried token. Returns
+        the slot, or None when a slot or blocks are unavailable (the
+        handoff is untouched — the caller retries)."""
+        if not self.paged:
+            raise ValueError("adopt_sequence requires the paged cache")
+        if handoff.block_size != self.block_size:
+            raise ValueError(
+                f"handoff block_size {handoff.block_size} != engine "
+                f"block_size {self.block_size} — replicas must share "
+                f"the pool geometry")
+        slot = self._free_slot()
+        if slot is None:
+            return None
+        n_res = max(self._handoff_blocks(handoff.req), handoff.n_blocks)
+        short = n_res - self.allocator.num_free
+        if short > 0 and self.radix is not None:
+            self.radix.evict(short)
+        ids = self.allocator.alloc(n_res)
+        if ids is None:
+            return None
+        blob = handoff.blob
+        if self._shard_pool:
+            # re-lay the blob onto THIS engine's mesh (cross-replica
+            # migration moves between disjoint device groups)
+            from repro.sharding import specs
+            blob = jax.device_put(
+                blob, specs.handoff_shardings(blob, self.mesh))
         else:
-            assert logits is not None      # cap guarantees start < plen
-            tok = int(self._sample(logits[:, plen - 1 - last_c0],
-                                   [req])[0])
-            req.output.append(tok)
-            if self.on_token:
-                self.on_token(req, tok)
+            blob = jax.tree_util.tree_map(
+                lambda b, leaf: jax.device_put(b, leaf.sharding),
+                blob, self.pool)
+        self.pool = paged_lib.adopt_blocks(
+            self.pool, ids[:handoff.n_blocks], blob)
+        self.seq_blocks[slot] = paged_lib.SeqBlocks(ids, 0)
+        self.tables[slot, :] = 0
+        self.tables[slot, :len(ids)] = ids
+        self._tables_dev = None
+        req = handoff.req
+        req.finish_reason = None           # clears a migration's marker
         self.slot_req[slot] = req
-        self.pos[slot] = plen
-        self.last_tok[slot] = tok
+        self.pos[slot] = handoff.pos
+        self.last_tok[slot] = handoff.last_tok
+        self._note_active()
         return slot
 
     def _evict(self, slot: int):
@@ -692,6 +912,19 @@ class Engine:
     def tick(self):
         """One decode step for all slots (inactive slots decode garbage
         into their own row / the null block; masked on readout)."""
+        if self.prefill_only:
+            raise RuntimeError(
+                "prefill-only worker cannot tick; export its sequences "
+                "to a decode engine (serving/router/disagg.py)")
+        if self._prefilling:
+            # an in-flight job's table row is live — a tick would
+            # scatter garbage into its first block. Fused admission
+            # completes jobs inline; interleaving belongs to a separate
+            # prefill worker, never to one engine.
+            raise RuntimeError(
+                f"tick with in-flight prefill jobs in slots "
+                f"{sorted(self._prefilling)}; drive them to completion "
+                f"(or cancel) first")
         if all(r is None for r in self.slot_req):
             return
         if self.trace is not None:

@@ -130,6 +130,27 @@ class RadixCache:
             self.hit_blocks += len(ids)
         return ids
 
+    def peek(self, tokens: Sequence[int],
+             max_blocks: int | None = None) -> int:
+        """Non-mutating probe: how many leading whole blocks of
+        ``tokens`` the tree holds. No LRU touch, no stats — the replica
+        router's radix-affinity policy scores EVERY replica's cache per
+        placement decision, and a probe that counted as a lookup would
+        skew hit rates and promote untaken paths in the LRU order."""
+        BS = self.block_size
+        offered = len(tokens) // BS
+        if max_blocks is not None:
+            offered = min(offered, max_blocks)
+        depth = 0
+        node = self._root
+        for i in range(offered):
+            child = node.children.get(tuple(tokens[i * BS:(i + 1) * BS]))
+            if child is None:
+                break
+            depth += 1
+            node = child
+        return depth
+
     def insert(self, tokens: Sequence[int], block_ids: Sequence[int]
                ) -> int:
         """Store the whole-block prefix ``tokens`` (length must be

@@ -202,3 +202,66 @@ class SeqBlocks:
 
     def __len__(self):
         return len(self.ids)
+
+
+# --------------------------------------------------------------- handoff
+#
+# Disaggregated prefill/decode and cross-replica migration both move a
+# sequence between engines whose pools are *different arrays* (possibly
+# on different devices). Because every pool layout keys cache rows by
+# (physical block, offset) and rows at position p depend only on tokens
+# 0..p, a sequence is fully described by a bit-copy of its written
+# blocks in logical order plus the scalar decode state — no requant, no
+# layout translation, int8 scales ride along inside the pytree leaves.
+
+def export_blocks(pool, ids: Sequence[int]):
+    """Gather physical blocks ``ids`` (logical order) out of ``pool``.
+
+    Returns a pytree shaped like the pool with the block axis narrowed
+    to ``len(ids)`` — leaves ``(L, n, BS, ...)``. The gather is an eager
+    device-side op; under a mesh the blob inherits the pool's sharding
+    (head-sharded leaves stay head-sharded).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    idx = jnp.asarray(list(ids), dtype=jnp.int32)
+    return jax.tree_util.tree_map(lambda leaf: leaf[:, idx], pool)
+
+
+def adopt_blocks(pool, ids: Sequence[int], blob):
+    """Scatter an exported ``blob`` into ``pool`` at physical ``ids``.
+
+    Inverse of :func:`export_blocks`: ``blob`` logical block ``i`` lands
+    in ``pool`` physical block ``ids[i]``. Returns the updated pool
+    (functional update, same layout/sharding). The caller owns ``ids``
+    exclusively (fresh ``alloc``), so no copy-on-write is needed.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if len(ids) == 0:
+        return pool
+    idx = jnp.asarray(list(ids), dtype=jnp.int32)
+    return jax.tree_util.tree_map(
+        lambda leaf, b: leaf.at[:, idx].set(b.astype(leaf.dtype)),
+        pool, blob)
+
+
+@dataclasses.dataclass
+class SequenceHandoff:
+    """A sequence packaged for adoption by another engine.
+
+    ``blob`` holds the first ``n_blocks`` logical blocks of the
+    sequence (every position < ``pos`` is written); ``pos`` is the next
+    cache position to write and ``last_tok`` the token that will be fed
+    there — exactly the two scalars ``Engine.tick`` consumes. ``req``
+    travels with its accumulated ``output`` so finish bookkeeping and
+    rid-keyed sampling continue bit-identically on the adopting engine.
+    """
+    req: object
+    blob: object
+    n_blocks: int
+    pos: int
+    last_tok: int
+    block_size: int

@@ -1,0 +1,14 @@
+"""Data-parallel replica routing + disaggregated prefill/decode.
+
+``ReplicaRouter`` spreads requests over N independent ``Engine``
+replicas (one per data-axis index of a ("data", "model") mesh) behind
+the exact ``Engine`` surface the async front end consumes;
+``DisaggReplica`` splits a replica into prefill/decode workers with
+paged-block handoff. See DESIGN.md §14.
+"""
+from repro.serving.router.disagg import DisaggReplica
+from repro.serving.router.policies import POLICIES, make_policy
+from repro.serving.router.router import FusedReplica, ReplicaRouter
+
+__all__ = ["ReplicaRouter", "FusedReplica", "DisaggReplica",
+           "POLICIES", "make_policy"]

@@ -1,0 +1,86 @@
+"""Placement policies: which replica gets the next request.
+
+A policy ranks replicas, it does not admit — the router walks the
+ranking and takes the first replica whose admission succeeds, so a
+policy never has to reason about transient capacity races. Rankings
+are total orders with the replica index as the final tiebreak, which
+keeps placement deterministic for a given engine state — that is what
+makes the routed-vs-oracle parity tests reproducible.
+
+``least_loaded`` — most free pool blocks first (ties: fewest resident
+requests, then index). Block capacity, not slot count, is what actually
+gates admission on the paged engine, so this is the balanced-throughput
+default.
+
+``radix_affinity`` — longest cached prompt prefix first (non-mutating
+``RadixCache.peek``; falls back to least-loaded scoring when no replica
+knows the prefix). Routing a recurring system prompt back to the
+replica that already holds its blocks turns a cross-replica recompute
+into a local fork.
+
+``round_robin`` — rotating start index; the load-oblivious baseline
+the benchmarks compare against.
+"""
+from __future__ import annotations
+
+
+class RoundRobin:
+    """Rotate the starting replica per placement; probe the rest in
+    ring order (a full ring, so a busy replica never blackholes the
+    request)."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def rank(self, router, req) -> list[int]:
+        n = len(router.replicas)
+        start = self._next % n
+        self._next = (start + 1) % n
+        return [(start + k) % n for k in range(n)]
+
+
+class LeastLoaded:
+    """Most free blocks first; ties broken by fewest resident requests,
+    then replica index."""
+
+    name = "least_loaded"
+
+    def rank(self, router, req) -> list[int]:
+        reps = router.replicas
+        return sorted(range(len(reps)),
+                      key=lambda i: (-reps[i].free_blocks(),
+                                     reps[i].active(), i))
+
+
+class RadixAffinity:
+    """Longest cached prefix first (``RadixCache.peek`` — no LRU touch,
+    no stats skew), least-loaded order among replicas that tie."""
+
+    name = "radix_affinity"
+
+    def rank(self, router, req) -> list[int]:
+        reps = router.replicas
+        return sorted(range(len(reps)),
+                      key=lambda i: (-reps[i].peek_prefix(req.tokens),
+                                     -reps[i].free_blocks(),
+                                     reps[i].active(), i))
+
+
+POLICIES = {p.name: p for p in (RoundRobin, LeastLoaded, RadixAffinity)}
+
+
+def make_policy(policy) -> object:
+    """Resolve a policy name (``POLICIES`` key) or pass an instance
+    through. Unknown names list the registry."""
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy]()
+        except KeyError:
+            raise ValueError(
+                f"unknown placement policy {policy!r}; "
+                f"have {sorted(POLICIES)}") from None
+    if not hasattr(policy, "rank"):
+        raise TypeError(f"policy {policy!r} has no rank() method")
+    return policy

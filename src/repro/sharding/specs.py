@@ -179,6 +179,22 @@ def paged_pool_shardings(pool_tree, mesh: Mesh):
     return jax.tree_util.tree_map(one, pool_tree)
 
 
+def handoff_shardings(blob_tree, mesh: Mesh):
+    """Shardings for a sequence-handoff blob (``paged.export_blocks``
+    output) on ``mesh``. A blob is the pool with the physical-block
+    axis narrowed to the sequence's own blocks — rank and trailing dims
+    are unchanged, so the ``paged_pool_spec`` rule applies verbatim and
+    the adopting engine's scatter is shard-local (each device writes
+    its own head-slice; the only data motion is the inter-replica
+    transfer itself). Used by ``Engine.adopt_sequence`` to re-lay a
+    blob exported from one replica's device group onto another's."""
+    msz = _axis_size(mesh, "model")
+
+    def one(leaf):
+        return NamedSharding(mesh, paged_pool_spec(leaf.shape, msz))
+    return jax.tree_util.tree_map(one, blob_tree)
+
+
 def paged_pool_spec(shape: tuple[int, ...], model_size: int) -> P:
     """The pure PartitionSpec rule behind ``paged_pool_shardings`` for
     one ``(L, NB, BS, ...)`` pool leaf: first of {axis 3 (Hkv or D),

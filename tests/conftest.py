@@ -14,6 +14,25 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "nightly: slow full-matrix sweeps (24-combo sharded parity, "
+        "all-arch serving smoke) run by the scheduled workflow: "
+        "pytest -m nightly")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Nightly-marked tests are skipped from plain runs (tier-1 must
+    stay fast); any explicit ``-m`` expression takes over selection."""
+    if config.option.markexpr:
+        return
+    skip = pytest.mark.skip(reason="nightly-only: run with -m nightly")
+    for item in items:
+        if "nightly" in item.keywords:
+            item.add_marker(skip)
+
+
 def forced_devices_env(num_devices=None):
     """Subprocess env for tests that force a host device count. The
     override must be set BEFORE the child's jax import and must never

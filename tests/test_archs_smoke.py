@@ -126,6 +126,38 @@ def test_paper_score_modes_on_whisper():
     assert abs(losses["wqk_int8"] - losses["standard"]) < 0.1, losses
 
 
+@pytest.mark.nightly
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serving_smoke_every_arch_nightly(arch):
+    """Scheduled-workflow smoke: every registered arch serves a small
+    continuous-batching run end to end (paged auto-selection, chunked
+    prefill, slot reuse) and every request finishes by length."""
+    from repro.models import frontends
+    from repro.serving.engine import Engine, Request
+
+    cfg = reduced(get_arch(arch), num_layers=2)
+    if cfg.attn_every:
+        cfg = dataclasses.replace(cfg, num_layers=cfg.attn_every)
+    model = build_model(cfg)
+    p = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, p, max_slots=2, max_len=64)
+    rng = np.random.default_rng(5)
+    reqs = []
+    for i in range(4):
+        r = Request(rid=i,
+                    tokens=[1] + rng.integers(3, cfg.vocab_size, 6).tolist(),
+                    max_new_tokens=4, eos_id=None)
+        if cfg.enc_dec:
+            r.tokens = [1]
+            r.enc_embeds = frontends.audio_frames(1, 24, cfg.d_model,
+                                                  seed=i)
+        reqs.append(r)
+    eng.run(reqs)
+    assert all(r.done for r in reqs), [(r.rid, r.finish_reason)
+                                       for r in reqs]
+    assert all(len(r.output) == 4 for r in reqs)
+
+
 def test_param_counts_sane():
     """Analytic param counts are within 25% of actual init sizes for the
     reduced configs (the 6ND roofline input)."""

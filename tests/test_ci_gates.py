@@ -1,0 +1,106 @@
+"""CI gate-coverage guard: a bench job that uploads a ``BENCH_*.json``
+artifact MUST be gated — listed in ``bench-gate.needs`` (so the gate
+waits for it) AND matched by the gate's ``--current`` file list (so the
+artifact is actually checked). Without this, adding a benchmark job
+that produces an artifact nobody gates would LOOK covered in the
+workflow while its floors silently never run — exactly how a
+regression ships. The inverse direction is guarded too: every file the
+gate iterates must come from some upload, so a renamed artifact cannot
+leave a stale gate entry that "passes" by being skipped.
+
+Parses ``.github/workflows/ci.yml`` structurally (pyyaml), normalizing
+``${{ ... }}`` expressions to ``*`` and comparing upload paths against
+gate entries with fnmatch in both directions (either side may be the
+glob: the gate globs ``BENCH_scores-py*.json`` over concrete matrix
+uploads, and a hypothetical concrete gate entry must still match a
+templated upload path).
+"""
+import fnmatch
+import pathlib
+import re
+
+import yaml
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+CI = ROOT / ".github" / "workflows" / "ci.yml"
+
+
+def _workflow() -> dict:
+    return yaml.safe_load(CI.read_text())
+
+
+def _norm(path: str) -> str:
+    """'BENCH_scores-py${{ matrix.python-version }}.json' ->
+    'BENCH_scores-py*.json'."""
+    return re.sub(r"\$\{\{[^}]*\}\}", "*", str(path)).strip()
+
+
+def _globs_overlap(a: str, b: str) -> bool:
+    return fnmatch.fnmatch(a, b) or fnmatch.fnmatch(b, a)
+
+
+def _bench_uploads(wf: dict) -> dict:
+    """job name -> [(normalized artifact path, step dict)] for every
+    upload-artifact step whose path is a BENCH_*.json file."""
+    out: dict = {}
+    for job, spec in wf["jobs"].items():
+        for step in spec.get("steps", []):
+            if not str(step.get("uses", "")).startswith(
+                    "actions/upload-artifact"):
+                continue
+            pat = _norm(step.get("with", {}).get("path", ""))
+            if _globs_overlap(pat, "BENCH_*.json"):
+                out.setdefault(job, []).append((pat, step))
+    return out
+
+
+def _gate_files(wf: dict) -> list:
+    """The ``for f in ...`` file list of bench-gate's check_regression
+    invocation."""
+    for step in wf["jobs"]["bench-gate"]["steps"]:
+        run = step.get("run", "")
+        if "check_regression" in run:
+            m = re.search(r"for\s+f\s+in(.*?);", run, re.S)
+            assert m, f"bench-gate run script has no 'for f in' list:\n{run}"
+            return [t for t in m.group(1).replace("\\", " ").split() if t]
+    raise AssertionError("bench-gate has no check_regression step")
+
+
+def test_every_bench_artifact_is_gated():
+    wf = _workflow()
+    uploads = _bench_uploads(wf)
+    assert uploads, "no BENCH_* uploads found — parser broke?"
+    needs = wf["jobs"]["bench-gate"]["needs"]
+    gate_files = _gate_files(wf)
+    for job, arts in uploads.items():
+        assert job in needs, (
+            f"job {job!r} uploads {[a for a, _ in arts]} but is missing "
+            f"from bench-gate.needs {needs} — the gate may run before "
+            f"the artifact exists")
+        for pat, _ in arts:
+            assert any(_globs_overlap(pat, g) for g in gate_files), (
+                f"job {job!r} uploads {pat!r} but no bench-gate "
+                f"--current entry matches it {gate_files} — the "
+                f"artifact's floors never run")
+
+
+def test_every_gated_file_has_a_producer():
+    wf = _workflow()
+    produced = [pat for arts in _bench_uploads(wf).values()
+                for pat, _ in arts]
+    for g in _gate_files(wf):
+        if g == "BENCH_baseline.json":
+            continue                      # committed, not uploaded
+        assert any(_globs_overlap(g, pat) for pat in produced), (
+            f"bench-gate iterates {g!r} but no job uploads it — stale "
+            f"gate entry would silently gate nothing")
+
+
+def test_bench_uploads_survive_failures():
+    """Every BENCH upload step must run ``if: always()`` — the artifact
+    is most needed when a later gate fails (to diagnose or refresh the
+    baseline)."""
+    for job, arts in _bench_uploads(_workflow()).items():
+        for pat, step in arts:
+            assert str(step.get("if", "")).strip() == "always()", (
+                f"{job}: upload of {pat!r} lacks 'if: always()'")

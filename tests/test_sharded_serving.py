@@ -140,7 +140,7 @@ def test_admission_scales_with_per_device_budget():
 # ------------------------------------------------- oracle parity sweep
 
 _SWEEP_SCRIPT = r"""
-import dataclasses, warnings
+import dataclasses, json, sys, warnings
 import jax, numpy as np
 from repro.configs.base import get_arch, reduced
 from repro.models.model import build_model
@@ -210,64 +210,100 @@ def parity(label, model, params, mesh, sched, exact=False, atol=1e-4):
     print(f"  {label}: ok")
 
 
-mesh4 = make_mesh((1, 4), ("data", "model"))
-mesh8 = make_mesh((1, 8), ("data", "model"))
+def mesh_of(spec):
+    d, m = spec.split("x")
+    return make_mesh((int(d), int(m)), ("data", "model"))
+
+
+# combos arrive as JSON argv so the tier-1 run and the nightly full
+# matrix share ONE script (and one definition of parity)
+payload = json.loads(sys.argv[1])
+for label, score_mode, cache_mode, cache_quant, spec, sched, atol \
+        in payload["combos"]:
+    model, params = build(score_mode, cache_mode, cache_quant)
+    parity(label, model, params, mesh_of(spec), sched, atol=atol)
+
+if payload.get("extras"):
+    # degenerate 1x1 mesh == mesh=None, bit-for-bit
+    model, params = build("standard")
+    parity("kv-float-stream-1x1-exact", model, params, mesh_of("1x1"),
+           "stream", exact=True)
+
+    # factored cannot split heads: replicated-pool fallback + warning
+    model, params = build("factored")
+    mesh4 = mesh_of("1x4")
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        e = Engine(model, params, max_slots=3, max_len=64, block_size=8,
+                   num_blocks=24, mesh=mesh4)
+    assert any("cannot shard heads" in str(w.message) for w in wlog), \
+        [str(w.message) for w in wlog]
+    assert not e.pool_sharded
+    reqs = requests()
+    e.run(reqs)
+    ref = Engine(model, params, max_slots=3, max_len=64, block_size=8,
+                 num_blocks=24)
+    ref_reqs = requests()
+    ref.run(ref_reqs)
+    assert [r.output for r in reqs] == [r.output for r in ref_reqs]
+print("SHARDED_SWEEP_OK")
+"""
 
 # int8 rows tolerate a quantization step of drift: an epsilon-level
 # reduction-reorder difference on a value sitting at a rounding
 # boundary flips one int8 code (~row_max/127) — greedy tokens must
-# still match exactly
-COMBOS = [
-    ("kv-float-stream-1x4", ("standard", None, None), mesh4, "stream",
-     1e-4),
-    ("kv-float-gather-1x4", ("standard", None, None), mesh4, "gather",
-     1e-4),
-    ("kv-int8-stream-1x4", ("standard", None, "int8"), mesh4, "stream",
-     5e-3),
-    ("xv-float-stream-1x4", ("wqk", "xv", None), mesh4, "stream", 1e-4),
-    ("xv-int8-gather-1x4", ("wqk", "xv", "int8"), mesh4, "gather", 5e-3),
-    ("x-float-gather-1x4", ("wqk", "x", None), mesh4, "gather", 1e-4),
-    ("x-int8-stream-1x4", ("wqk", "x", "int8"), mesh4, "stream", 5e-3),
-    ("kv-float-stream-1x8", ("standard", None, None), mesh8, "stream",
-     1e-4),
+# still match exactly. Combo rows: [label, score_mode, cache_mode,
+# cache_quant, mesh, schedule, atol].
+TIER1_COMBOS = [
+    ["kv-float-stream-1x4", "standard", None, None, "1x4", "stream", 1e-4],
+    ["kv-float-gather-1x4", "standard", None, None, "1x4", "gather", 1e-4],
+    ["kv-int8-stream-1x4", "standard", None, "int8", "1x4", "stream", 5e-3],
+    ["xv-float-stream-1x4", "wqk", "xv", None, "1x4", "stream", 1e-4],
+    ["xv-int8-gather-1x4", "wqk", "xv", "int8", "1x4", "gather", 5e-3],
+    ["x-float-gather-1x4", "wqk", "x", None, "1x4", "gather", 1e-4],
+    ["x-int8-stream-1x4", "wqk", "x", "int8", "1x4", "stream", 5e-3],
+    ["kv-float-stream-1x8", "standard", None, None, "1x8", "stream", 1e-4],
 ]
-for label, args, mesh, sched, atol in COMBOS:
-    model, params = build(*args)
-    parity(label, model, params, mesh, sched, atol=atol)
 
-# degenerate 1x1 mesh == mesh=None, bit-for-bit
-model, params = build("standard")
-mesh1 = make_mesh((1, 1), ("data", "model"))
-parity("kv-float-stream-1x1-exact", model, params, mesh1, "stream",
-       exact=True)
 
-# factored cannot split heads: replicated-pool fallback with a warning
-model, params = build("factored")
-with warnings.catch_warnings(record=True) as wlog:
-    warnings.simplefilter("always")
-    e = Engine(model, params, max_slots=3, max_len=64, block_size=8,
-               num_blocks=24, mesh=mesh4)
-assert any("cannot shard heads" in str(w.message) for w in wlog), \
-    [str(w.message) for w in wlog]
-assert not e.pool_sharded
-reqs = requests()
-e.run(reqs)
-ref = Engine(model, params, max_slots=3, max_len=64, block_size=8,
-             num_blocks=24)
-ref_reqs = requests()
-ref.run(ref_reqs)
-assert [r.output for r in reqs] == [r.output for r in ref_reqs]
-print("SHARDED_SWEEP_OK")
-"""
+def _full_matrix():
+    """The nightly sweep: every {layout} x {quant} x {schedule} on both
+    mesh widths — 24 combos (tier-1 runs the 8-row diagonal above)."""
+    combos = []
+    for spec in ("1x4", "1x8"):
+        for lname, smode, cmode in (("kv", "standard", None),
+                                    ("xv", "wqk", "xv"),
+                                    ("x", "wqk", "x")):
+            for quant in (None, "int8"):
+                for sched in ("stream", "gather"):
+                    combos.append(
+                        [f"{lname}-{quant or 'float'}-{sched}-{spec}",
+                         smode, cmode, quant, spec, sched,
+                         5e-3 if quant else 1e-4])
+    return combos
+
+
+def _run_sweep(combos, extras, timeout):
+    import json
+    r = subprocess.run(
+        [sys.executable, "-c", _SWEEP_SCRIPT,
+         json.dumps({"combos": combos, "extras": extras})],
+        capture_output=True, text=True, timeout=timeout,
+        env=forced_devices_env(8))
+    assert "SHARDED_SWEEP_OK" in r.stdout, r.stdout + r.stderr
 
 
 def test_sharded_engine_matches_oracle_subprocess():
     """1x4 + 1x8 meshes across layouts/quant/schedules == the
     single-device engine, token-for-token and logit-for-logit."""
-    r = subprocess.run([sys.executable, "-c", _SWEEP_SCRIPT],
-                       capture_output=True, text=True, timeout=1800,
-                       env=forced_devices_env(8))
-    assert "SHARDED_SWEEP_OK" in r.stdout, r.stdout + r.stderr
+    _run_sweep(TIER1_COMBOS, extras=True, timeout=1800)
+
+
+@pytest.mark.nightly
+def test_sharded_engine_full_matrix_nightly():
+    """The exhaustive 24-combo cross product (scheduled workflow only —
+    see .github/workflows/nightly.yml)."""
+    _run_sweep(_full_matrix(), extras=False, timeout=3600)
 
 
 def test_parse_mesh_validates():
